@@ -1,0 +1,36 @@
+"""Paper fig. 6: ARI per variant per dataset (+ the paper's average-ARI
+claim: OPT within noise of PAR-10, PAR-200 clearly worse)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ari import ari
+from repro.core.pipeline import cluster
+from .common import emit, load_bench_datasets
+
+
+def run(scale: float = 1.0,
+        variants=("par-1", "par-10", "par-200", "corr", "heap", "opt")):
+    rows = []
+    scores = {v: [] for v in variants}
+    for ds in load_bench_datasets(scale):
+        row = dict(name=f"fig6/{ds['name']}", us_per_call="")
+        for v in variants:
+            res = cluster(ds["X"], k=ds["k"], variant=v)
+            a = ari(ds["labels"], res.labels)
+            scores[v].append(a)
+            row[f"ari_{v}"] = f"{a:.3f}"
+        row["derived"] = f"opt={row['ari_opt']}"
+        rows.append(row)
+    avg = {v: float(np.mean(s)) for v, s in scores.items()}
+    rows.append(dict(
+        name="fig6/AVERAGE", us_per_call="",
+        derived=f"opt_minus_par10={avg['opt'] - avg['par-10']:+.3f}",
+        **{f"ari_{v}": f"{a:.3f}" for v, a in avg.items()}))
+    return emit(rows, ["name", "us_per_call", "derived"]
+                + [f"ari_{v}" for v in variants])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper fig. 5: runtime breakdown by pipeline stage (similarity /
+TMFG construction / APSP+DBHT) on the Crop stand-in, per variant."""
+
+from __future__ import annotations
+
+from repro.core.pipeline import cluster
+from .common import emit, load_bench_datasets
+
+
+def run(scale: float = 1.0, variants=("par-10", "corr", "heap", "opt")):
+    ds = [d for d in load_bench_datasets(scale) if d["name"] == "Crop"][0]
+    rows = []
+    for v in variants:
+        res = cluster(ds["X"], k=ds["k"], variant=v, collect_timings=True)
+        t = res.timings
+        total = sum(t.values())
+        rows.append(dict(
+            name=f"fig5/crop/{v}",
+            us_per_call=f"{total * 1e6:.0f}",
+            derived=f"tmfg_frac={t['tmfg'] / total:.2f}",
+            t_similarity=f"{t['similarity']:.3f}",
+            t_tmfg=f"{t['tmfg']:.3f}",
+            t_dbht_apsp=f"{t['dbht+apsp']:.3f}",
+        ))
+    return emit(rows, ["name", "us_per_call", "derived", "t_similarity",
+                       "t_tmfg", "t_dbht_apsp"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: datasets, timing, CSV output.
+
+Benchmarks run at CPU-sized scales by default (``--scale``); every table
+reports the paper-comparable *relative* quantities (speedups, ARI deltas,
+edge-sum ratios) that are scale-free, alongside raw wall times.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.data.timeseries import UCR_SIZES, make_ucr_like
+
+# the representative subset used across benchmarks (ids into Table 1),
+# including the paper's three "largest" (Crop, ElectricDevices,
+# StarLightCurves) at reduced scale
+BENCH_SETS = [
+    ("CBF", 1.0),
+    ("SonyAIBORobotSurface2", 1.0),
+    ("ECG5000", 0.25),
+    ("Crop", 0.06),
+    ("ElectricDevices", 0.07),
+    ("StarLightCurves", 0.12),
+]
+
+
+def load_bench_datasets(scale: float = 1.0, seed: int = 0):
+    out = []
+    for name, s in BENCH_SETS:
+        nm, X, labels, k = make_ucr_like(name, scale=s * scale, seed=seed)
+        out.append(dict(name=nm, X=X, labels=labels, k=k, n=X.shape[0]))
+    return out
+
+
+def timeit(fn: Callable, *, repeats: int = 1, warmup: int = 0) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(rows: List[Dict], header: List[str]):
+    """Print the scaffold's ``name,us_per_call,derived`` CSV convention."""
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+    return rows

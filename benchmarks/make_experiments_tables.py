@@ -1,0 +1,89 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables
+from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}TB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1e-1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def load(out_dir="results/dryrun"):
+    recs = [json.load(open(f))
+            for f in sorted(glob.glob(os.path.join(out_dir, "*.json")))]
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    print(f"\n### Dry-run — mesh {mesh}\n")
+    print("| arch | shape | ok | compile | args/dev | temps/dev | fits 16G |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        m = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | "
+              f"{'YES' if r.get('ok') else 'FAIL'} | "
+              f"{r.get('compile_s', 0):.0f}s | "
+              f"{fmt_bytes(m.get('arg_bytes'))} | "
+              f"{fmt_bytes(m.get('temp_bytes'))} | "
+              f"{r.get('fits_hbm', '-')} |")
+
+
+def roofline_table(recs, mesh="16x16"):
+    print(f"\n### Roofline — mesh {mesh} (per chip; 197TF bf16, 819GB/s "
+          f"HBM, 50GB/s link)\n")
+    print("| arch | shape | T_compute | T_memory | T_collective | dominant "
+          "| MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != mesh or not r.get("ok") or "roofline" not in r:
+            continue
+        if r["arch"] == "paper-tmfg":
+            continue
+        ro = r["roofline"]
+        bound = max(ro["t_compute_s"], ro["t_memory_s"],
+                    ro["t_collective_s"])
+        frac = ro["t_compute_s"] / bound if bound else 0
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(ro['t_compute_s'])} | "
+              f"{fmt_s(ro['t_memory_s'])} | {fmt_s(ro['t_collective_s'])} | "
+              f"{ro['dominant']} | {ro['useful_flops_ratio']:.2f} | "
+              f"{frac:.2f} |")
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    print(f"cells: {len(recs)}, ok: {n_ok}")
+    for mesh in ("16x16", "2x16x16"):
+        dryrun_table(recs, mesh)
+    roofline_table(recs, "16x16")
+
+
+if __name__ == "__main__":
+    main()

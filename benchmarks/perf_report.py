@@ -1,0 +1,80 @@
+"""Perf-iteration tooling: deep-dive one dry-run cell from its saved HLO.
+
+    PYTHONPATH=src python -m benchmarks.perf_report results/dryrun/<tag>.hlo.gz
+
+Reports the §Perf working set: roofline terms, collective bytes by op and
+by replica-group size, top flop-carrying computations, and while-loop trip
+structure — the "profile" used by the hypothesis→change→measure loop
+(EXPERIMENTS.md §Perf).  Also used to A/B two HLO dumps after a change.
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+import re
+import sys
+
+from repro.launch import hlo_cost
+
+HW = dict(peak=197e12, bw=819e9, link=50e9)
+
+
+def load_text(path: str) -> str:
+    if path.endswith(".gz"):
+        with gzip.open(path, "rt") as f:
+            return f.read()
+    with open(path) as f:
+        return f.read()
+
+
+def report(path: str, top: int = 12) -> dict:
+    text = load_text(path)
+    model = hlo_cost.HloCostModel(text)
+    totals = model.entry_cost()
+
+    print(f"== {path}")
+    t_c = totals.flops / HW["peak"]
+    t_m = totals.hbm_bytes / HW["bw"]
+    t_x = totals.collective_wire_bytes / HW["link"]
+    print(f" roofline: compute {t_c:.4g}s | memory {t_m:.4g}s | "
+          f"collective {t_x:.4g}s")
+    print(f" flops/dev {totals.flops:.4g}  hbm_bytes/dev "
+          f"{totals.hbm_bytes:.4g}  wire_bytes/dev "
+          f"{totals.collective_wire_bytes:.4g}")
+    print(" collectives:", dict(totals.collective_counts))
+    print(" wire bytes by op:",
+          {k: f"{v:.3g}" for k, v in totals.collective_bytes_by_op.items()})
+
+    # top computations by (unmultiplied) flops — where the compute lives
+    per_comp = []
+    for name in model.comps:
+        if name == "__entry__":
+            continue
+        c = model.comp_cost(name)
+        if c.flops > 0:
+            per_comp.append((c.flops, name))
+    per_comp.sort(reverse=True)
+    print(f" top-{top} computations by flops:")
+    for fl, name in per_comp[:top]:
+        print(f"   {fl:14.4g}  {name}")
+
+    # while-loop structure
+    print(" while loops (trip x body):")
+    for comp in model.comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                bc = hlo_cost._TRIP_RE.search(ins.rest)
+                body = hlo_cost._BODY_RE.search(ins.rest)
+                if bc and body:
+                    bf = model.comp_cost(body.group(1)).flops
+                    if bf > 0:
+                        print(f"   trips={bc.group(1):>6s} "
+                              f"body_flops={bf:12.4g}  {body.group(1)}")
+    return dict(flops=totals.flops, hbm=totals.hbm_bytes,
+                wire=totals.collective_wire_bytes)
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        report(p)

@@ -1,0 +1,75 @@
+"""Roofline aggregation: results/dryrun/*.json -> the §Roofline table.
+
+Per (arch x shape x mesh) cell: the three roofline terms (seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the one-line lever.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def lever(rec: dict) -> str:
+    r = rec.get("roofline", {})
+    dom = r.get("dominant")
+    shape = rec.get("shape", "")
+    if dom == "compute":
+        if r.get("useful_flops_ratio", 1) < 0.5:
+            return "cut non-model FLOPs (remat recompute / masked waste)"
+        return "near compute roofline; try finer overlap"
+    if dom == "memory":
+        if "decode" in shape or "500k" in shape:
+            return "KV/state residency: shrink cache reads (window, quant)"
+        return "increase arithmetic intensity (fusion, larger microbatch)"
+    if dom == "collective":
+        return "re-shard to cut wire bytes (2D->1D, overlap, compress)"
+    return "-"
+
+
+def load(out_dir: str = "results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(f))
+        rows.append(rec)
+    return rows
+
+
+def run(out_dir: str = "results/dryrun", mesh: str = "16x16"):
+    rows = load(out_dir)
+    header = ["name", "us_per_call", "derived", "t_compute_s", "t_memory_s",
+              "t_collective_s", "dominant", "useful_ratio", "fits_hbm",
+              "lever"]
+    print(",".join(header))
+    out = []
+    for rec in rows:
+        if rec.get("mesh") != mesh:
+            continue
+        tag = f"roofline/{rec['arch']}/{rec['shape']}"
+        if not rec.get("ok"):
+            print(f"{tag},,FAILED:{rec.get('error', '?')[:60]}")
+            continue
+        r = rec["roofline"]
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        row = dict(
+            name=tag,
+            us_per_call=f"{bound * 1e6:.0f}",
+            derived=f"dominant={r['dominant']}",
+            t_compute_s=f"{r['t_compute_s']:.4g}",
+            t_memory_s=f"{r['t_memory_s']:.4g}",
+            t_collective_s=f"{r['t_collective_s']:.4g}",
+            dominant=r["dominant"],
+            useful_ratio=f"{r['useful_flops_ratio']:.3f}",
+            fits_hbm=rec.get("fits_hbm"),
+            lever=lever(rec),
+        )
+        out.append(row)
+        print(",".join(str(row.get(h, "")) for h in header))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

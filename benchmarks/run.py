@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig2,...]
+
+Prints ``name,us_per_call,derived`` CSV per section (plus section-specific
+columns).  Sections:
+  fig2  runtime per variant            (bench_tmfg)
+  fig3  parallel scaling surrogates    (bench_speedup)
+  fig5  stage breakdown                (bench_breakdown)
+  fig6  ARI per variant                (bench_ari)
+  fig7  edge-sum reduction             (bench_edgesum)
+  apsp  exact vs hub APSP              (bench_apsp)
+  roofline  dry-run roofline table     (roofline; needs results/dryrun)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_apsp, bench_ari, bench_breakdown, bench_edgesum,
+               bench_speedup, bench_tmfg, roofline)
+
+SECTIONS = {
+    "fig2": lambda scale: bench_tmfg.run(scale),
+    "fig3": lambda scale: bench_speedup.run(scale),
+    "fig5": lambda scale: bench_breakdown.run(scale),
+    "fig6": lambda scale: bench_ari.run(scale),
+    "fig7": lambda scale: bench_edgesum.run(scale),
+    "apsp": lambda scale: bench_apsp.run(scale),
+    "roofline": lambda scale: roofline.run(),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="dataset size multiplier (CPU-sized defaults)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated section subset")
+    args = ap.parse_args(argv)
+
+    only = [s for s in args.only.split(",") if s] or list(SECTIONS)
+    for name in only:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            SECTIONS[name](args.scale)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name},,SECTION-FAILED:{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

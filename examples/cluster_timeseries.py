@@ -1,0 +1,23 @@
+"""Compare every TMFG-DBHT variant on a UCR-like dataset (paper fig. 2/6).
+
+    PYTHONPATH=src python examples/cluster_timeseries.py [dataset] [scale]
+"""
+
+import sys
+import time
+
+from repro.core.ari import ari
+from repro.core.pipeline import VARIANTS, cluster
+from repro.data.timeseries import make_ucr_like
+
+name = sys.argv[1] if len(sys.argv) > 1 else "CBF"
+scale = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
+ds_name, X, labels, k = make_ucr_like(name, scale=scale)
+print(f"dataset {ds_name}: n={X.shape[0]} L={X.shape[1]} classes={k}\n")
+
+print(f"{'variant':10s} {'time':>8s} {'ARI':>7s} {'edge sum':>10s}")
+for variant in VARIANTS:
+    t0 = time.time()
+    res = cluster(X, k=k, variant=variant)
+    print(f"{variant:10s} {time.time() - t0:7.2f}s "
+          f"{ari(labels, res.labels):7.3f} {res.edge_sum:10.1f}")

@@ -1,0 +1,28 @@
+"""Quickstart: cluster synthetic time series with TMFG-DBHT (OPT-TDBHT).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.ari import ari
+from repro.core.pipeline import cluster
+from repro.data.timeseries import make_dataset
+
+# 300 series, 5 latent classes
+X, labels = make_dataset(n=300, L=96, k=5, noise=0.7, seed=0)
+
+# the paper's full pipeline: Pearson similarity -> lazy (heap-equivalent)
+# TMFG with an up-front top-K candidate table -> hub-approximate APSP ->
+# DBHT dendrogram, cut at k=5
+result = cluster(X, k=5, variant="opt", collect_timings=True)
+
+print(f"clusters found: {len(np.unique(result.labels))}")
+print(f"ARI vs ground truth: {ari(labels, result.labels):.3f}")
+print(f"TMFG edge sum: {result.edge_sum:.1f}")
+print("stage timings:", {k: f"{v:.3f}s" for k, v in result.timings.items()})
+
+# the dendrogram is a scipy-style linkage matrix: cut it anywhere
+for k in (2, 5, 10):
+    print(f"k={k:2d}: sizes =",
+          np.bincount(result.labels_at(k)).tolist())

@@ -1,0 +1,9 @@
+"""Serving example: continuous batching over a reduced granite-3-8b.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main
+
+main(["--arch", "granite-3-8b", "--reduced", "--requests", "6",
+      "--slots", "3", "--prompt-len", "10", "--max-new", "6"])

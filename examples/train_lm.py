@@ -1,0 +1,23 @@
+"""End-to-end training driver example: train a ~140M xLSTM for a few
+hundred steps on synthetic data with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py          # reduced, fast
+    PYTHONPATH=src python examples/train_lm.py --full   # full 125M config
+"""
+
+import sys
+
+from repro.launch.train import main
+
+full = "--full" in sys.argv
+args = [
+    "--arch", "xlstm-125m",
+    "--steps", "300" if full else "60",
+    "--batch", "8", "--seq", "128",
+    "--ckpt-dir", "/tmp/repro_ckpt",
+    "--ckpt-every", "100",
+    "--log-every", "20",
+]
+if not full:
+    args.append("--reduced")
+main(args)

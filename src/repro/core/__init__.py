@@ -1,0 +1,26 @@
+"""The paper's primary contribution: parallel TMFG construction (CORR/LAZY)
+and DBHT hierarchical clustering, plus hub-approximate APSP and complete
+linkage -- all as composable JAX modules.  See DESIGN.md.
+
+Public API (function names chosen not to shadow submodules):
+  build_tmfg            -- jit'd TMFG construction (orig / corr / lazy)
+  run_dbht              -- DBHT clustering on a TMFG     (module: .dbht)
+  apsp_exact / apsp_hub -- all-pairs shortest paths      (module: .apsp)
+  complete_linkage      -- vectorized HAC                (module: .hac)
+  cluster               -- end-to-end pipeline (OPT-TDBHT by default)
+  adjusted_rand_index   -- ARI metric                    (module: .ari)
+"""
+
+from . import apsp, ari, dbht, hac, pipeline, tmfg  # noqa: F401
+from .apsp import apsp_exact, apsp_hub, edge_lengths  # noqa: F401
+from .ari import ari as adjusted_rand_index  # noqa: F401
+from .dbht import DBHTResult, dbht as run_dbht  # noqa: F401
+from .hac import complete_linkage, cut_linkage  # noqa: F401
+from .pipeline import ClusterResult, VARIANTS, cluster  # noqa: F401
+from .tmfg import TMFGResult, build_tmfg, tmfg_adjacency  # noqa: F401
+
+# restore submodule attributes clobbered by same-named function imports
+import sys as _sys
+apsp = _sys.modules[__name__ + ".apsp"]
+ari = _sys.modules[__name__ + ".ari"]
+dbht = _sys.modules[__name__ + ".dbht"]

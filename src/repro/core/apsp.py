@@ -1,0 +1,109 @@
+"""All-pairs shortest paths on the TMFG — exact and hub-approximate.
+
+The paper's DBHT stage needs APSP over the filtered graph.  Its optimization
+C3 replaces exact APSP with a hub-based approximation.  TPU adaptation
+(DESIGN.md §2): priority queues don't vectorize, so both variants are
+expressed in the tropical (min-plus) semiring on dense matrices, backed by
+the ``kernels/minplus.py`` Pallas kernel:
+
+  * exact:   ⌈log2(n-1)⌉ min-plus squarings of the length matrix.
+  * hub:     R Bellman-Ford rounds restricted to h hub rows
+             (each round one (h,n)x(n,n) min-plus), then composition
+             ``D[u,v] ≈ min_h D[u,h] + D[h,v]`` — an (n,h)x(h,n) min-plus —
+             taking a final elementwise min with the direct edge lengths.
+
+Hubs are the highest weighted-degree TMFG vertices (h = ceil(sqrt(n)) by
+default).  The approximation is an upper bound on the true distance, exact
+for any pair whose shortest path passes a hub (TMFG's early-inserted
+vertices are high-degree hubs, so in practice most paths do — measured in
+benchmarks/bench_apsp.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+INF = jnp.inf
+
+
+def edge_lengths(n: int, edges: jax.Array, S: jax.Array) -> jax.Array:
+    """Dense length matrix of the TMFG: d = sqrt(2(1-rho)) on edges.
+
+    Non-edges are +inf, the diagonal is 0.  This is the standard metric
+    transform for correlation similarities (Mantegna 1999).
+    """
+    rho = jnp.clip(S[edges[:, 0], edges[:, 1]], -1.0, 1.0)
+    w = jnp.sqrt(jnp.maximum(2.0 * (1.0 - rho), 0.0))
+    W = jnp.full((n, n), INF, jnp.float32)
+    W = W.at[edges[:, 0], edges[:, 1]].set(w)
+    W = W.at[edges[:, 1], edges[:, 0]].set(w)
+    W = W.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return W
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def apsp_exact(W: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """Exact APSP by repeated min-plus squaring (assumes W symmetric, 0 diag)."""
+    n = W.shape[0]
+    steps = max(1, math.ceil(math.log2(max(n - 1, 2))))
+    D = W
+
+    def body(D, _):
+        return ops.minplus(D, D, backend=backend), None
+
+    D, _ = jax.lax.scan(body, D, None, length=steps)
+    return D
+
+
+@functools.partial(jax.jit, static_argnames=("n_hubs", "rounds", "backend"))
+def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
+             backend: str = "auto") -> jax.Array:
+    """Hub-based approximate APSP (paper optimization C3, TPU formulation).
+
+    Args:
+      W: dense (n, n) length matrix (inf off-graph, 0 diagonal).
+      n_hubs: number of hub vertices; 0 means ceil(sqrt(n)).
+      rounds: Bellman-Ford relaxation rounds for the hub rows.  The TMFG's
+        diameter is small in practice (hub structure); 32 covers every
+        dataset in the paper.  Early rounds converge; extra rounds are
+        no-ops on already-converged rows (min is idempotent).
+    """
+    n = W.shape[0]
+    h = n_hubs if n_hubs > 0 else max(4, math.ceil(math.sqrt(n)))
+    h = min(h, n)
+
+    # hubs = highest weighted degree (sum of finite incident 1/length —
+    # strong-similarity vertices attract shortest paths)
+    finite = jnp.isfinite(W) & (W > 0)
+    strength = jnp.sum(jnp.where(finite, 1.0 / (W + 1e-6), 0.0), axis=1)
+    hubs = jax.lax.top_k(strength, h)[1]
+
+    # Bellman-Ford on the h hub rows: D_h <- min(D_h, minplus(D_h, W))
+    D_h = W[hubs]                                       # (h, n)
+
+    def body(D_h, _):
+        return jnp.minimum(D_h, ops.minplus(D_h, W, backend=backend)), None
+
+    D_h, _ = jax.lax.scan(body, D_h, None, length=rounds)
+
+    # composition through hubs + exact 1-hop floor
+    est = ops.minplus(D_h.T, D_h, backend=backend)      # (n, n)
+    est = jnp.minimum(est, W)
+    est = jnp.minimum(est, est.T)
+    est = est.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return est
+
+
+def apsp(W: jax.Array, *, method: str = "hub", **kw) -> jax.Array:
+    if method == "exact":
+        kw.pop("n_hubs", None), kw.pop("rounds", None)
+        return apsp_exact(W, **kw)
+    if method == "hub":
+        return apsp_hub(W, **kw)
+    raise ValueError(f"unknown APSP method {method!r}")

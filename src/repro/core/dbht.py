@@ -1,0 +1,211 @@
+"""DBHT — Directed Bubble Hierarchy Tree clustering on a TMFG.
+
+Implements the DBHT method (Song et al. 2012) as described by the paper's
+§2, split the way the paper splits it:
+
+  * O(n) *tree logic* (bubble tree, edge directions, converging bubbles,
+    flow assignment) runs on the host in numpy — this is the part the paper
+    notes is cheap and leaves serial;
+  * the *heavy* stages — APSP over the TMFG and complete-linkage HAC — run
+    on device in JAX (see apsp.py / hac.py), exactly the stages the paper
+    parallelizes.
+
+Pipeline:
+  1. bubble tree: node per 4-clique (from the TMFG insertion log), edge per
+     shared separating triangle — a tree with n-3 nodes.
+  2. edge directions: the tree edge between bubbles (c, p) with separating
+     triangle t points toward the side whose vertices are more strongly
+     connected to t (aggregate TMFG similarity strength).  Clique-tree
+     running intersection ⇒ the two sides partition V \\ t, and a vertex's
+     side is its home bubble's side.
+  3. converging bubbles: only incoming edges (local attractors).
+  4. coarse clusters: every bubble flows along its strongest outgoing edge
+     until it reaches a converging bubble; a vertex inherits its home
+     bubble's destination.
+  5. fine structure: each vertex is re-assigned to the bubble in its
+     cluster's basin with minimal mean APSP distance.
+  6. dendrogram: one complete-linkage run on the offset-adjusted APSP
+     matrix (hac.hierarchical_offsets) = nested intra-bubble/intra-cluster/
+     inter-cluster HAC.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+import repro.core.apsp as apsp_mod
+import repro.core.hac as hac_mod
+
+
+@dataclass
+class DBHTResult:
+    linkage: np.ndarray          # (n-1, 4) scipy-style dendrogram
+    cluster_of: np.ndarray       # (n,) coarse cluster id per vertex
+    bubble_of: np.ndarray        # (n,) fine bubble assignment per vertex
+    converging: np.ndarray       # ids of converging bubbles
+    direction: np.ndarray        # (n-4,) +1 edge points parent->child else -1
+    apsp: np.ndarray             # (n, n) distances used
+
+    def labels(self, k: int) -> np.ndarray:
+        n = self.cluster_of.shape[0]
+        return hac_mod.cut_linkage(self.linkage, n, k)
+
+
+# ---------------------------------------------------------------------------
+# host-side tree logic
+# ---------------------------------------------------------------------------
+
+def _euler_tour(parent: np.ndarray):
+    """Iterative DFS in/out times for the bubble tree (parents precede kids)."""
+    B = parent.shape[0]
+    children = [[] for _ in range(B)]
+    for b in range(1, B):
+        children[parent[b]].append(b)
+    tin = np.zeros(B, np.int64)
+    tout = np.zeros(B, np.int64)
+    t = 0
+    stack = [(0, False)]
+    while stack:
+        node, done = stack.pop()
+        if done:
+            tout[node] = t
+            continue
+        tin[node] = t
+        t += 1
+        stack.append((node, True))
+        for ch in reversed(children[node]):
+            stack.append((ch, False))
+    return tin, tout
+
+
+def _edge_directions(S: np.ndarray, edges: np.ndarray, bubble_parent: np.ndarray,
+                     bubble_tri: np.ndarray, home_bubble: np.ndarray):
+    """Direction of every bubble-tree edge by side connection strength.
+
+    Edge b (b>=1) connects bubble b to parent p with separating triangle t.
+    side(b) = vertices whose home bubble lies in subtree(b); strength of a
+    side is the sum of TMFG edge weights from t's vertices into that side.
+    Returns +1 if the edge points p->b (subtree side stronger) else -1.
+    """
+    n = S.shape[0]
+    B = bubble_parent.shape[0]
+    tin, tout = _euler_tour(bubble_parent)
+
+    # CSR-ish adjacency of the TMFG
+    adj = [[] for _ in range(n)]
+    for a, b in edges:
+        adj[int(a)].append(int(b))
+        adj[int(b)].append(int(a))
+
+    home_tin = tin[home_bubble]  # (n,)
+    direction = np.zeros(B, np.int64)  # index by child bubble id; [0] unused
+    for b in range(1, B):
+        t = bubble_tri[b]
+        tset = set(int(x) for x in t)
+        lo, hi = tin[b], tout[b]
+        s_child = 0.0
+        s_parent = 0.0
+        for v in t:
+            for u in adj[int(v)]:
+                if u in tset:
+                    continue
+                if lo <= home_tin[u] < hi:
+                    s_child += S[int(v), u]
+                else:
+                    s_parent += S[int(v), u]
+        direction[b] = 1 if s_child >= s_parent else -1
+    return direction, tin, tout
+
+
+def _flow_to_converging(bubble_parent, direction, strength=None):
+    """Follow outgoing edges (ties: strongest) until a converging bubble.
+
+    Edge between child b and parent p: direction[b]=+1 means p->b (outgoing
+    for p, incoming for b); -1 means b->p.  Converging bubble: no outgoing.
+    Returns (flow destination per bubble, converging bubble ids).
+    """
+    B = bubble_parent.shape[0]
+    out_edges = [[] for _ in range(B)]  # (target bubble)
+    for b in range(1, B):
+        p = bubble_parent[b]
+        if direction[b] == 1:
+            out_edges[p].append(b)
+        else:
+            out_edges[b].append(p)
+    converging = np.array([b for b in range(B) if not out_edges[b]],
+                          dtype=np.int64)
+    dest = np.full(B, -1, np.int64)
+
+    def walk(b):
+        path = []
+        cur = b
+        while dest[cur] == -1 and out_edges[cur]:
+            path.append(cur)
+            cur = out_edges[cur][0]  # tree ⇒ no cycles along out-edges
+        d = dest[cur] if dest[cur] != -1 else cur
+        dest[cur] = d
+        for x in path:
+            dest[x] = d
+        return d
+
+    for b in range(B):
+        if dest[b] == -1:
+            walk(b)
+    return dest, converging
+
+
+# ---------------------------------------------------------------------------
+# main entry
+# ---------------------------------------------------------------------------
+
+def dbht(S, tmfg, *, apsp_method: str = "hub", apsp_backend: str = "auto",
+         precomputed_apsp: Optional[np.ndarray] = None) -> DBHTResult:
+    """Run DBHT on a TMFG (accepts JAX or numpy TMFGResult fields)."""
+    S = np.asarray(S, dtype=np.float64)
+    n = S.shape[0]
+    edges = np.asarray(tmfg.edges)
+    bubble_parent = np.asarray(tmfg.bubble_parent)
+    bubble_tri = np.asarray(tmfg.bubble_tri)
+    bubble_verts = np.asarray(tmfg.bubble_verts)
+    home_bubble = np.asarray(tmfg.home_bubble)
+    B = bubble_parent.shape[0]
+
+    # 2-3. directions and converging bubbles (host, O(n))
+    direction, tin, tout = _edge_directions(
+        S, edges, bubble_parent, bubble_tri, home_bubble)
+    dest, converging = _flow_to_converging(bubble_parent, direction)
+    conv_index = {int(c): i for i, c in enumerate(converging)}
+    cluster_of = np.array([conv_index[int(dest[home_bubble[v]])]
+                           for v in range(n)], dtype=np.int64)
+
+    # 7. APSP on device (the heavy stage; hub-approximate by default = C3)
+    if precomputed_apsp is not None:
+        D = np.asarray(precomputed_apsp)
+    else:
+        W = apsp_mod.edge_lengths(n, jnp.asarray(edges), jnp.asarray(S))
+        D = np.asarray(apsp_mod.apsp(W, method=apsp_method,
+                                     backend=apsp_backend))
+
+    # 8. fine bubble assignment: nearest (mean APSP) bubble in the cluster
+    # basin.  basin(c) = bubbles flowing to converging bubble c.
+    bubble_cluster = np.array([conv_index[int(dest[b])] for b in range(B)],
+                              dtype=np.int64)
+    mean_dist = D[:, bubble_verts.reshape(-1)].reshape(n, B, 4).mean(axis=2)
+    same = bubble_cluster[None, :] == cluster_of[:, None]          # (n, B)
+    masked = np.where(same, mean_dist, np.inf)
+    bubble_of = np.argmin(masked, axis=1)
+
+    # 9. nested dendrogram via one offset-adjusted complete linkage (device)
+    adj = hac_mod.hierarchical_offsets(
+        jnp.asarray(D, dtype=jnp.float32),
+        jnp.asarray(bubble_of), jnp.asarray(cluster_of))
+    Z = np.asarray(hac_mod.complete_linkage(adj))
+
+    return DBHTResult(linkage=Z, cluster_of=cluster_of, bubble_of=bubble_of,
+                      converging=converging, direction=direction[1:],
+                      apsp=D)

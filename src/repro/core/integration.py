@@ -1,0 +1,63 @@
+"""First-class integration of TMFG-DBHT into the LM framework.
+
+The paper's technique consumes any similarity matrix, so it attaches to
+every architecture in the zoo identically (DESIGN.md §Arch-applicability):
+
+  * :func:`cluster_sequences` — cluster training sequences by pooled-
+    embedding Pearson correlation.  Used by the data pipeline for
+    cluster-coherent batching (improves MoE routing locality and lets the
+    curriculum schedule sample per-cluster).
+  * :func:`cluster_activations` — cluster hidden states of a batch (model
+    analysis / probing).
+  * :func:`expert_affinity` — for MoE archs: cluster experts by router
+    co-activation statistics (which experts fire together), a direct reuse
+    of the paper's filtered-graph view of a correlation matrix.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .pipeline import cluster
+
+
+def _pool(emb: jnp.ndarray) -> jnp.ndarray:
+    """Mean-pool (batch, seq, d) token embeddings to (batch, d)."""
+    if emb.ndim == 3:
+        return emb.mean(axis=1)
+    return emb
+
+
+def cluster_sequences(embeddings, *, k=None, variant: str = "opt"):
+    """Cluster sequences by embedding correlation.  Returns (labels, result).
+
+    ``embeddings``: (batch, d) pooled — or (batch, seq, d), mean-pooled.
+    """
+    E = np.asarray(_pool(jnp.asarray(embeddings)))
+    res = cluster(E, k=k, variant=variant)
+    return res.labels, res
+
+
+def cluster_activations(hidden, *, k=None, variant: str = "opt"):
+    """Cluster a batch by a layer's hidden states (analysis tool)."""
+    return cluster_sequences(hidden, k=k, variant=variant)
+
+
+def expert_affinity(router_probs, *, k=None, variant: str = "opt"):
+    """Cluster experts by co-activation.
+
+    ``router_probs``: (tokens, n_experts) routing probabilities.  The
+    similarity of two experts is the Pearson correlation of their routing
+    probability across tokens.
+    """
+    Rp = np.asarray(router_probs).T          # (experts, tokens)
+    res = cluster(Rp, k=k, variant=variant)
+    return res.labels, res
+
+
+def cluster_batch_order(embeddings, *, variant: str = "opt") -> np.ndarray:
+    """Permutation putting same-cluster sequences adjacent (for batching)."""
+    labels, _ = cluster_sequences(embeddings, variant=variant)
+    return np.argsort(labels, kind="stable")

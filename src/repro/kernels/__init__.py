@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+  * minplus.py   -- tropical matmul (APSP: exact squaring + hub composition)
+  * pearson.py   -- fused correlation-matrix construction (pipeline input)
+  * gainscan.py  -- batched masked row argmax (the vectorized MaxCorrs scan,
+                    TPU analogue of the paper's AVX2/512 optimization)
+  * flash_attention.py -- block-wise attention for the LM architecture zoo
+
+Each kernel ships with a pure-jnp oracle in ref.py and a dispatching
+wrapper in ops.py (pallas on TPU, interpret for tests, jnp on CPU).
+"""
+
+from . import ops, ref  # noqa: F401

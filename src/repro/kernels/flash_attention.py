@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: block-wise flash attention (GQA, causal, windowed).
+
+The TPU twin of models/attention.py:_flash — same online-softmax algorithm,
+expressed as a pallas_call so the (bq, bk) score tile lives in VMEM and the
+running (max, denom, accumulator) stats live in VMEM scratch across the kv
+grid dimension (TPU grids iterate the last dimension innermost, so scratch
+carries are well-defined).
+
+GQA without materialization: K/V BlockSpec index_maps divide the head index
+by the group size, so all G query heads of a group read the same KV block
+straight from HBM.
+
+Out-of-range blocks (causal upper triangle / outside the sliding window)
+are skipped with ``pl.when`` — the MXU never sees them, matching the
+block-skip bounds of the XLA formulation.
+
+VMEM at the default (bq, bk) = (256, 512), hd=128, f32:
+  q 128 KiB + k/v 512 KiB + scores 512 KiB + acc 128 KiB « 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int,
+                  seq_k: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+
+    # block relevance: causal upper bound + window lower bound
+    relevant = True
+    if causal:
+        relevant = k_lo <= q_lo + bq - 1
+    if window > 0:
+        relevant = relevant & (k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        q_idx = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_idx = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_idx < seq_k
+        if causal:
+            mask &= q_idx >= k_idx
+        if window > 0:
+            mask &= (q_idx - k_idx) < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 256, bk: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Tq, H, hd); k, v: (B, Tk, KV, hd) with H % KV == 0.
+    Returns (B, Tq, H, hd) attention output."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq_, bk_ = min(bq, Tq), min(bk, Tk)
+    pq, pk = (-Tq) % bq_, (-Tk) % bk_
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Tq, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * KV, Tk, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * KV, Tk, hd)
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    nq, nk = (Tq + pq) // bq_, (Tk + pk) // bk_
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq_, bk=bk_, nk=nk, causal=causal,
+        window=window, seq_k=Tk, scale=1.0 / math.sqrt(hd))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda b, qi, ki: (b, qi, 0)),
+            # GQA: all G heads of a group index the same KV row
+            pl.BlockSpec((1, bk_, hd), lambda b, qi, ki, G=G: (b // G, ki, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda b, qi, ki, G=G: (b // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq_, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq_, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :Tq].reshape(B, H, Tq, hd)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Dense jnp oracle (fp32 softmax)."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, Tq, KV, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bqKgh,bsKh->bKgqs", qh, k.astype(jnp.float32))
+    qi = jnp.arange(Tq)[:, None]
+    ki = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask, s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bKgqs,bsKh->bKgqh", w, v.astype(jnp.float32))
+    o = jnp.moveaxis(o, 3, 1).reshape(B, Tq, H, hd)
+    return o.astype(q.dtype)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: batched masked row argmax (the MaxCorrs scan).
+
+This is the TPU replacement for the paper's AVX2/AVX-512 "advance past
+inserted vertices" scan (§4.3, optimization C4): for a block of similarity
+rows, find the best *uninserted* column — value and index — in one pass.
+
+Used for (a) the batched MaxCorrs initialization over all n rows, and
+(b) the per-step refresh of up to 4 rows (gathered into a row block).
+
+The kernel walks column tiles in the inner grid dimension, carrying a
+running (max value, argmax index) pair per row in the output tiles; the
+mask tile is broadcast across the row block.  Ties resolve to the lowest
+column index (strictly-greater update), matching jnp.argmax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.4e38  # finite -inf stand-in (kernel-internal only)
+
+
+def _masked_argmax_kernel(s_ref, m_ref, val_ref, idx_ref, *, bn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, NEG)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    s = s_ref[...]                                 # (bm, bn)
+    masked = jnp.where(m_ref[...], NEG, s)         # mask tile (1, bn) bcast
+    local_val = jnp.max(masked, axis=1, keepdims=True)           # (bm, 1)
+    local_idx = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    local_idx = (local_idx + j * bn)[:, None]                    # (bm, 1)
+    better = local_val > val_ref[...]
+    idx_ref[...] = jnp.where(better, local_idx, idx_ref[...])
+    val_ref[...] = jnp.maximum(val_ref[...], local_val)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def masked_argmax_pallas(S: jax.Array, mask: jax.Array, *, bm: int = 8,
+                         bn: int = 512, interpret: bool = False):
+    """Per-row (max, argmax) of S (m, n) excluding True columns of mask (n,).
+
+    Returns (values (m,) f32, indices (m,) i32).
+    """
+    m, n = S.shape
+    bm_, bn_ = min(bm, m), min(bn, n)
+    pm, pn = (-m) % bm_, (-n) % bn_
+    Sp = jnp.pad(S.astype(jnp.float32), ((0, pm), (0, pn)),
+                 constant_values=NEG)
+    maskp = jnp.pad(mask, ((0, pn),), constant_values=True)[None, :]  # (1, N)
+    M, N = Sp.shape
+
+    val, idx = pl.pallas_call(
+        functools.partial(_masked_argmax_kernel, bn=bn_),
+        grid=(M // bm_, N // bn_),
+        in_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm_, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Sp, maskp)
+    return val[:m, 0], idx[:m, 0]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: blocked min-plus (tropical) matrix multiplication.
+
+The workhorse of APSP (DESIGN.md §4.3): exact APSP is ⌈log2 n⌉ tropical
+squarings; hub-APSP composes ``(n,h)·(h,n)`` through hub rows.  On TPU the
+inner ``min(a[i,k] + b[k,j])`` cannot use the MXU (no multiply-accumulate in
+the tropical semiring), so the kernel is VPU-bound: we tile to VMEM with an
+explicitly small k-panel so the broadcasted ``(bm, bk, bn)`` intermediate
+stays well under the ~16 MiB VMEM budget, and walk k in the innermost grid
+dimension accumulating a running minimum in the output tile.
+
+VMEM budget at the default (128, 16, 128) f32 blocks:
+  a-tile 8 KiB + b-tile 8 KiB + out 64 KiB + broadcast 1 MiB  « 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    """Grid (i, j, k): o[i,j] = min_k tropical_prod(a[i,k], b[k,j])."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]                    # (bm, bk)
+    b = b_ref[...]                    # (bk, bn)
+    # tropical tile product: min over the k panel of a[:, k] + b[k, :]
+    prod = jnp.min(a[:, :, None] + b[None, :, :], axis=1)   # (bm, bn)
+    o_ref[...] = jnp.minimum(o_ref[...], prod)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def minplus_pallas(A: jax.Array, B: jax.Array, *, bm: int = 128, bk: int = 16,
+                   bn: int = 128, interpret: bool = False) -> jax.Array:
+    """Tropical matmul via pallas_call.  Shapes need not divide the blocks;
+    inputs are padded with +inf (the tropical zero) and the result cropped."""
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2, (A.shape, B.shape)
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+
+    pm, pk, pn = (-m) % bm_, (-k) % bk_, (-n) % bn_
+    Ap = jnp.pad(A.astype(jnp.float32), ((0, pm), (0, pk)),
+                 constant_values=jnp.inf)
+    Bp = jnp.pad(B.astype(jnp.float32), ((0, pk), (0, pn)),
+                 constant_values=jnp.inf)
+    M, K, N = Ap.shape[0], Ap.shape[1], Bp.shape[1]
+
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=(M // bm_, N // bn_, K // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(Ap, Bp)
+    return out[:m, :n]
+
+
+def minplus_jnp(A: jax.Array, B: jax.Array, *, panel: int = 128) -> jax.Array:
+    """Pure-jnp blocked fallback with O(m·panel·n) peak memory.
+
+    Used on the CPU dev container (Pallas interpret mode is a Python grid
+    loop — far too slow for production paths) and as the XLA:TPU baseline
+    the Pallas kernel is benchmarked against.
+    """
+    m, k = A.shape
+    _, n = B.shape
+    panel = min(panel, k)
+    pk = (-k) % panel
+    Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, pk)),
+                 constant_values=jnp.inf)
+    Bp = jnp.pad(B.astype(jnp.float32), ((0, pk), (0, 0)),
+                 constant_values=jnp.inf)
+    nk = Ap.shape[1] // panel
+
+    def body(c, idx):
+        a = jax.lax.dynamic_slice(Ap, (0, idx * panel), (m, panel))
+        b = jax.lax.dynamic_slice(Bp, (idx * panel, 0), (panel, n))
+        c = jnp.minimum(c, jnp.min(a[:, :, None] + b[None, :, :], axis=1))
+        return c, None
+
+    init = jnp.full((m, n), jnp.inf, jnp.float32)
+    out, _ = jax.lax.scan(body, init, jnp.arange(nk))
+    return out

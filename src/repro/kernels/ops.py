@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+Backends:
+  * ``"pallas"``    — compiled pallas_call (the TPU production path).
+  * ``"interpret"`` — pallas_call in interpret mode (kernel body executed in
+    Python on CPU; used by the correctness tests in this container).
+  * ``"jnp"``       — pure-jnp oracle/fallback (fast on CPU via XLA).
+  * ``"auto"``      — pallas on TPU, jnp elsewhere.
+
+The default is "auto" so the same library code runs correctly here (CPU)
+and fast on the target hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gainscan import masked_argmax_pallas
+from .minplus import minplus_jnp, minplus_pallas
+from .pearson import pearson_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def minplus(A: jax.Array, B: jax.Array, *, backend: str = "auto",
+            bm: int = 128, bk: int = 16, bn: int = 128) -> jax.Array:
+    """Tropical matmul: out[i,j] = min_k A[i,k] + B[k,j]."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return minplus_pallas(A, B, bm=bm, bk=bk, bn=bn)
+    if b == "interpret":
+        return minplus_pallas(A, B, bm=bm, bk=bk, bn=bn, interpret=True)
+    return minplus_jnp(A, B)
+
+
+def pearson(X: jax.Array, *, backend: str = "auto", bm: int = 128,
+            bn: int = 128, bl: int = 128) -> jax.Array:
+    """Pearson correlation matrix of the rows of X."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return pearson_pallas(X, bm=bm, bn=bn, bl=bl)
+    if b == "interpret":
+        return pearson_pallas(X, bm=bm, bn=bn, bl=bl, interpret=True)
+    return ref.pearson_ref(X)
+
+
+def masked_argmax(S: jax.Array, mask: jax.Array, *, backend: str = "auto",
+                  bm: int = 8, bn: int = 512):
+    """Per-row (max, argmax) of S with True-masked columns excluded."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return masked_argmax_pallas(S, mask, bm=bm, bn=bn)
+    if b == "interpret":
+        return masked_argmax_pallas(S, mask, bm=bm, bn=bn, interpret=True)
+    return ref.masked_argmax_ref(S, mask)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/test_kernels_*.py`` sweeps shapes/dtypes and asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -jnp.inf
+
+
+def minplus_ref(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Tropical (min-plus) matrix product: out[i,j] = min_k A[i,k] + B[k,j]."""
+    return jnp.min(A[:, :, None] + B[None, :, :], axis=1)
+
+
+def pearson_ref(X: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Pearson correlation matrix of the rows of X (n, L) -> (n, n)."""
+    X = X.astype(jnp.float32)
+    mu = X.mean(axis=1, keepdims=True)
+    Z = X - mu
+    denom = jnp.sqrt(jnp.sum(Z * Z, axis=1, keepdims=True)) + eps
+    Z = Z / denom
+    return jnp.clip(Z @ Z.T, -1.0, 1.0)
+
+
+def masked_argmax_ref(S: jnp.ndarray, mask: jnp.ndarray):
+    """Per-row (max value, argmax index) of S with masked columns excluded.
+
+    ``mask`` is (n,) bool; True columns are excluded.  Ties break low-index.
+    """
+    masked = jnp.where(mask[None, :], NEG, S)
+    return jnp.max(masked, axis=1), jnp.argmax(masked, axis=1).astype(jnp.int32)
+
+
+def gains_ref(S: jnp.ndarray, faces: jnp.ndarray, maxcorr: jnp.ndarray):
+    """Best (vertex, gain) per face from a maxcorr table — oracle for the
+    vectorized face-pair recompute (see core/tmfg.py:_all_face_pairs)."""
+    cands = maxcorr[faces]                                    # (F, 3)
+    g = S[faces[:, :, None], cands[:, None, :]].sum(axis=1)   # (F, 3)
+    j = jnp.argmax(g, axis=1)
+    best = jnp.take_along_axis(cands, j[:, None], 1)[:, 0].astype(jnp.int32)
+    return best, jnp.take_along_axis(g, j[:, None], 1)[:, 0]

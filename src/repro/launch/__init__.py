@@ -1,0 +1,3 @@
+"""Launch layer: production mesh, multi-pod dry-run, train/serve drivers,
+cluster fault-tolerance runbook.  NOTE: importing this package must never
+touch jax device state (dryrun.py sets XLA_FLAGS before importing jax)."""

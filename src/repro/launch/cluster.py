@@ -1,0 +1,181 @@
+"""Multi-pod cluster launch + fault-tolerance runbook.
+
+This module is the 1000+-node operational layer: per-host launch command
+construction, the supervision loop (heartbeats -> straggler detection ->
+elastic restart), and a *simulation harness* used by tests to exercise the
+whole failure path without hardware.
+
+On a real cluster every host runs::
+
+    python -m repro.launch.cluster worker \
+        --coordinator <host0>:8476 --num-hosts 128 --host-id $ID \
+        -- python -m repro.launch.train --arch mixtral-8x7b ...
+
+which wires jax.distributed.initialize(), then execs the training driver.
+The supervisor loop (here, in-process) watches heartbeats; on a dead or
+straggling host it:
+
+  1. checkpoints are already durable (train.py saves async every N steps);
+  2. recomputes the mesh for the surviving host set (drop to the largest
+     (pods x data x model) grid that fits — model axis is preserved, data
+     axis shrinks);
+  3. restarts the step function with checkpoint.restore(...,
+     shardings=new_mesh rules) — the elastic path in train/elastic.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import shlex
+import subprocess
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.train.elastic import HeartbeatRegistry, StragglerMonitor
+
+
+@dataclasses.dataclass
+class HostSpec:
+    host_id: int
+    addr: str
+    n_devices: int = 4          # chips per host (v5e: 4 or 8)
+
+
+def worker_cmd(coordinator: str, num_hosts: int, host_id: int,
+               inner: Sequence[str]) -> List[str]:
+    """The per-host launch command (documented entry point)."""
+    return [
+        "python", "-m", "repro.launch.cluster", "worker",
+        "--coordinator", coordinator,
+        "--num-hosts", str(num_hosts),
+        "--host-id", str(host_id),
+        "--", *inner,
+    ]
+
+
+def largest_mesh(n_chips: int, *, model: int = 16,
+                 pod_size: int = 256) -> tuple:
+    """Largest (pod, data, model) grid for a surviving chip count.
+
+    model parallelism is preserved (resharding TP is the expensive path);
+    data shrinks; pods = floor over full pods then merge the remainder
+    into the data axis of the last pod-group.
+    """
+    assert n_chips >= model, "cannot keep model axis"
+    usable = (n_chips // model) * model
+    pods = max(1, usable // pod_size)
+    data = usable // (pods * model)
+    return (pods, data, model)
+
+
+class Supervisor:
+    """Heartbeat -> straggler -> elastic-restart state machine."""
+
+    def __init__(self, hosts: List[HostSpec], *, heartbeat_timeout=60.0,
+                 model_axis: int = 16):
+        self.hosts = {h.host_id: h for h in hosts}
+        self.registry = HeartbeatRegistry(timeout=heartbeat_timeout)
+        self.monitor = StragglerMonitor()
+        self.model_axis = model_axis
+        self.generation = 0                 # bumps on every remesh
+        self.evicted: List[int] = []
+        self.events: List[dict] = []
+
+    # -- feeds (called by the transport layer / tests) ----------------------
+    def heartbeat(self, host_id: int, step_time: Optional[float] = None,
+                  now: Optional[float] = None):
+        self.registry.beat(host_id, now=now)
+        if step_time is not None:
+            self.monitor.record(host_id, step_time)
+
+    # -- supervision tick -----------------------------------------------------
+    def tick(self, now: Optional[float] = None) -> Optional[dict]:
+        """Returns a restart plan when the fleet must be re-meshed."""
+        dead = [h for h in self.registry.dead_hosts(now)
+                if h not in self.evicted]
+        stragglers = [h for h in self.monitor.stragglers()
+                      if h not in self.evicted and h not in dead]
+        if not dead and not stragglers:
+            return None
+        # policy: evict dead immediately; evict stragglers only if the
+        # fleet stays >= 75% (otherwise just rebalance data shards).
+        to_evict = list(dead)
+        survivors = [h for h in self.hosts if h not in self.evicted
+                     and h not in to_evict]
+        if stragglers and (len(survivors) - len(stragglers)
+                           >= 0.75 * len(self.hosts)):
+            to_evict += stragglers
+        if not to_evict:
+            weights = self.monitor.rebalance_weights(len(self.hosts))
+            plan = {"action": "rebalance", "weights": weights}
+            self.events.append(plan)
+            return plan
+        self.evicted += to_evict
+        survivors = [h for h in self.hosts if h not in self.evicted]
+        n_chips = sum(self.hosts[h].n_devices for h in survivors)
+        self.generation += 1
+        plan = {
+            "action": "remesh",
+            "generation": self.generation,
+            "evicted": to_evict,
+            "survivors": survivors,
+            "mesh": largest_mesh(n_chips, model=self.model_axis),
+        }
+        self.events.append(plan)
+        return plan
+
+
+def simulate_failure_recovery(n_hosts: int = 16, chips_per_host: int = 32,
+                              kill: Sequence[int] = (3,),
+                              straggle: Sequence[int] = (7,)) -> List[dict]:
+    """Deterministic simulation of the supervision loop (used in tests and
+    EXPERIMENTS.md §Dry-run to document the fault-tolerance path)."""
+    hosts = [HostSpec(i, f"host{i}", chips_per_host) for i in range(n_hosts)]
+    sup = Supervisor(hosts, heartbeat_timeout=5.0, model_axis=16)
+    t = 0.0
+    plans = []
+    for step in range(40):
+        t += 1.0
+        for h in range(n_hosts):
+            if h in kill and step >= 10:
+                continue                      # dead: stops beating
+            st = 1.0 + (8.0 if (h in straggle and step >= 5) else 0.0) \
+                + 0.01 * (h % 3)
+            sup.heartbeat(h, step_time=st, now=t)
+        plan = sup.tick(now=t)
+        if plan:
+            plans.append({"step": step, **plan})
+    return plans
+
+
+def main(argv=None):  # pragma: no cover - thin CLI shim
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    w = sub.add_parser("worker")
+    w.add_argument("--coordinator", required=True)
+    w.add_argument("--num-hosts", type=int, required=True)
+    w.add_argument("--host-id", type=int, required=True)
+    w.add_argument("inner", nargs=argparse.REMAINDER)
+    s = sub.add_parser("simulate")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "simulate":
+        for p in simulate_failure_recovery():
+            print(p)
+        return
+    # worker: initialize the jax distributed runtime, then exec the driver
+    import jax
+    jax.distributed.initialize(coordinator_address=args.coordinator,
+                               num_processes=args.num_hosts,
+                               process_id=args.host_id)
+    inner = args.inner[1:] if args.inner and args.inner[0] == "--" \
+        else args.inner
+    sys.exit(subprocess.call(inner))
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

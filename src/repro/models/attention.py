@@ -1,0 +1,393 @@
+"""GQA attention: chunked (flash-style) training/prefill, cached decode.
+
+Three paths:
+  * ``attention_full``   — O(T·chunk) memory online-softmax attention for
+    train/prefill.  Outer ``lax.scan`` over query chunks, inner
+    ``lax.fori_loop`` over KV chunks with *data-dependent bounds*: the
+    causal upper bound and sliding-window lower bound skip whole KV blocks,
+    so a window-W layer does O(T·W) work and a causal layer O(T²/2) — the
+    block-skipping that a Pallas flash kernel does on TPU, expressed in XLA
+    (kernels/flash_attention.py is the TPU twin, interpret-validated).
+  * ``attention_decode`` — one-token query against a (ring-buffer) KV cache.
+  * ``cross_attention``  — encoder-decoder cross attention (dense softmax;
+    encoder memories are short).
+
+Sliding-window layers keep a ring buffer of W slots; each slot stores its
+absolute position (``slot_pos``) so masking is position-exact regardless of
+rotation (RoPE is applied at write time with absolute positions).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import apply_mrope, apply_rope, dense_init
+
+NEG = -1e30
+
+
+def attn_init(key, cfg, dtype, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, H * hd, dtype),
+        "wk": dense_init(k2, d, KV * hd, dtype),
+        "wv": dense_init(k3, d, KV * hd, dtype),
+        "wo": dense_init(k4, H * hd, d, dtype),
+    }
+
+
+def _project_qkv(p, x, cfg, positions, rope: bool = True):
+    B, T, _ = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, T, H, hd)
+    k = (x @ p["wk"]).reshape(B, T, KV, hd)
+    v = (x @ p["wv"]).reshape(B, T, KV, hd)
+    if rope:
+        if cfg.mrope:
+            pos3 = positions if positions.ndim == 3 else \
+                jnp.broadcast_to(positions, (3,) + positions.shape)
+            q = apply_mrope(q, pos3, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.rope_theta)
+        else:
+            pos = positions if positions.ndim == 2 else positions[0]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _flash(q, k, v, *, causal: bool, window, q_chunk: int = 512,
+           kv_chunk: int = 1024, block_skip: bool = True,
+           unroll_q: bool = False):
+    """Online-softmax attention.  q: (B,Tq,H,hd); k,v: (B,Tk,KV,hd).
+
+    Two traversals of the q-chunk axis:
+
+    * ``unroll_q=True`` (training): Python loop over q chunks — the causal
+      upper bound and sliding-window lower bound of the inner KV loop are
+      *static*, so out-of-range KV blocks are skipped AND the loop is
+      reverse-differentiable.  Requires ``window`` to be a Python int.
+    * ``unroll_q=False`` (inference/prefill): ``lax.scan`` over q chunks
+      with data-dependent ``fori_loop`` bounds (tiny HLO, not
+      differentiable).  ``window`` may be a traced scalar here (<=0 means
+      full attention), enabling per-layer windows as scan xs.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = min(q_chunk, Tq)
+    kc = min(kv_chunk, Tk)
+    pq, pk = (-Tq) % qc, (-Tk) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Tq + pq) // qc, (Tk + pk) // kc
+    scale = 1.0 / math.sqrt(hd)
+    q = (q * scale).reshape(B, nq, qc, KV, G, hd)
+    q = jnp.moveaxis(q, 1, 0)  # (nq, B, qc, KV, G, hd)
+
+    static_window = isinstance(window, int)
+    if static_window:
+        weff = window if window > 0 else Tk + qc + 1
+    else:
+        w_arr = jnp.asarray(window, jnp.int32)
+        weff = jnp.where(w_arr > 0, w_arr, jnp.int32(Tk + qc + 1))
+
+    def make_kv_step(q_lo, qch):
+        def kv_step(kj, carry):
+            m, l, acc = carry
+            kch = lax.dynamic_slice(k, (0, kj * kc, 0, 0), (B, kc, KV, hd))
+            vch = lax.dynamic_slice(v, (0, kj * kc, 0, 0), (B, kc, KV, hd))
+            s = jnp.einsum("bqKgh,bsKh->bKgqs", qch.astype(jnp.float32),
+                           kch.astype(jnp.float32))   # (B,KV,G,qc,kc)
+            q_idx = q_lo + jnp.arange(qc)
+            k_idx = kj * kc + jnp.arange(kc)
+            mask = (q_idx[:, None] - k_idx[None, :]) < weff
+            if causal:
+                mask &= q_idx[:, None] >= k_idx[None, :]
+            mask &= (k_idx < Tk)[None, :]
+            s = jnp.where(mask, s, NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bKgqs,bsKh->bKgqh", p, vch.astype(jnp.float32))
+            return m_new, l, acc
+        return kv_step
+
+    def init_carry():
+        return (jnp.full((B, KV, G, qc), NEG, jnp.float32),
+                jnp.zeros((B, KV, G, qc), jnp.float32),
+                jnp.zeros((B, KV, G, qc, hd), jnp.float32))
+
+    def finish(l, acc):
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,qc,hd)
+        out = jnp.moveaxis(out, 3, 1)                 # (B,qc,KV,G,hd)
+        return out.reshape(B, qc, H * hd)
+
+    if unroll_q:
+        assert static_window, "unroll_q requires a static window"
+        outs = []
+        for qi in range(nq):
+            q_lo = qi * qc
+            hi = min((q_lo + qc + kc - 1) // kc, nk) \
+                if (causal and block_skip) else nk
+            lo = max((q_lo - weff + 1) // kc, 0) if block_skip else 0
+            _, l, acc = lax.fori_loop(lo, hi, make_kv_step(q_lo, q[qi]),
+                                      init_carry())
+            outs.append(finish(l, acc))
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :Tq]
+
+    def q_step(_, qi_and_chunk):
+        qi, qch = qi_and_chunk
+        q_lo = qi * qc
+        if causal and block_skip:
+            hi = jnp.minimum((q_lo + qc + kc - 1) // kc, nk)
+        else:
+            hi = nk
+        lo = jnp.maximum((q_lo - weff + 1) // kc, 0) if block_skip else 0
+        _, l, acc = lax.fori_loop(lo, hi, make_kv_step(q_lo, qch),
+                                  init_carry())
+        return None, finish(l, acc)
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), q))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * qc, H * hd)
+    return out[:, :Tq]
+
+
+def attention_full(p, x, positions, *, cfg, window, causal: bool = True,
+                   q_chunk: int = 512, kv_chunk: int = 1024,
+                   block_skip: bool = True, unroll_q: bool = False):
+    """Full-sequence attention; returns (out (B,T,d), (k, v)) for caching.
+
+    The returned (k, v) copies carry the launcher's ``kv_cache`` sharding
+    hint (sequence-sharded over `model` at the 32k prefill shapes) so the
+    stacked-across-layers prefill cache never materializes replicated."""
+    from repro.dist import hints as _hints
+
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = _flash(q, k, v, causal=causal, window=window, q_chunk=q_chunk,
+                 kv_chunk=kv_chunk, block_skip=block_skip, unroll_q=unroll_q)
+    k_out = _hints.constrain(k, "kv_cache")
+    v_out = _hints.constrain(v, "kv_cache")
+    return (out.astype(x.dtype) @ p["wo"]), (k_out, v_out)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S, KV, hd)
+    v: jax.Array          # (B, S, KV, hd)
+    slot_pos: jax.Array   # (B, S) absolute position per slot (-1 empty)
+
+
+def cache_init(cfg, batch: int, capacity: int, dtype) -> KVCache:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, capacity, KV, hd), dtype),
+        v=jnp.zeros((batch, capacity, KV, hd), dtype),
+        slot_pos=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def cache_fill_from_prefill(cache: KVCache, k, v, positions) -> KVCache:
+    """Write prefill keys/values (B,T,KV,hd) into the cache.
+
+    Global layers: capacity >= T, slot = position.  Window layers: ring of W
+    slots — only the last W positions are written (distinct slots)."""
+    B, T = k.shape[0], k.shape[1]
+    S = cache.k.shape[1]
+    pos = positions[0] if positions.ndim >= 2 else positions  # (T,)
+    pos = pos.astype(jnp.int32)
+    if S >= T:
+        ck = lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+        sp = cache.slot_pos.at[:, :T].set(pos[None, :])
+        return KVCache(ck, cv, sp)
+    tail_k, tail_v, tail_p = k[:, T - S:], v[:, T - S:], pos[T - S:]
+    idx = (tail_p % S).astype(jnp.int32)
+    ck = cache.k.at[:, idx].set(tail_k)
+    cv = cache.v.at[:, idx].set(tail_v)
+    sp = cache.slot_pos.at[:, idx].set(tail_p[None, :])
+    return KVCache(ck, cv, sp)
+
+
+def attention_decode(p, x, cache: KVCache, pos, *, cfg, window: int):
+    """One-token decode.  x: (B, 1, d); pos: scalar — or a (B,) vector of
+    per-sequence positions (continuous batching serves sequences at
+    different depths in one batched step).  Returns (out, updated cache)."""
+    B = x.shape[0]
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    S = cache.k.shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    pos_arr = pos_b[:, None]                              # (B, 1)
+    q, k_new, v_new = _project_qkv(
+        p, x, cfg,
+        jnp.broadcast_to(pos_arr, (3, B, 1)) if cfg.mrope else pos_arr)
+
+    slot = pos_b % S                                      # (B,)
+    bidx = jnp.arange(B)
+    ck = cache.k.at[bidx, slot].set(k_new[:, 0])
+    cv = cache.v.at[bidx, slot].set(v_new[:, 0])
+    sp = cache.slot_pos.at[bidx, slot].set(pos_b)
+    cache = KVCache(ck, cv, sp)
+
+    qh = q.reshape(B, KV, G, hd) / math.sqrt(hd)
+    s = jnp.einsum("bKgh,bsKh->bKgs", qh.astype(jnp.float32),
+                   cache.k.astype(jnp.float32))        # (B,KV,G,S)
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos_b[:, None])
+    if window > 0:
+        valid &= cache.slot_pos > (pos_b[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgs,bsKh->bKgh", w, cache.v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized KV cache (beyond-paper: §Perf decode hillclimb)
+# ---------------------------------------------------------------------------
+
+class QuantKVCache(NamedTuple):
+    """Per-(slot, head) symmetric int8 K/V with f32 scales.
+
+    Decode is memory-bound on the cache sweep (§Roofline: every decode
+    cell is memory-dominant); int8 storage halves bytes-per-token read vs
+    bf16 at <1e-2 logit error (tests/test_kv_quant.py)."""
+
+    k: jax.Array          # (B, S, KV, hd) int8
+    v: jax.Array          # (B, S, KV, hd) int8
+    k_scale: jax.Array    # (B, S, KV) f32
+    v_scale: jax.Array    # (B, S, KV) f32
+    slot_pos: jax.Array   # (B, S) int32
+
+
+def quant_cache_init(cfg, batch: int, capacity: int) -> QuantKVCache:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return QuantKVCache(
+        k=jnp.zeros((batch, capacity, KV, hd), jnp.int8),
+        v=jnp.zeros((batch, capacity, KV, hd), jnp.int8),
+        k_scale=jnp.zeros((batch, capacity, KV), jnp.float32),
+        v_scale=jnp.zeros((batch, capacity, KV), jnp.float32),
+        slot_pos=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def _quant(x):
+    """(…, hd) -> int8 values + per-head scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quant_cache_fill_from_prefill(cache: QuantKVCache, k, v,
+                                  positions) -> QuantKVCache:
+    B, T = k.shape[0], k.shape[1]
+    S = cache.k.shape[1]
+    pos = positions[0] if positions.ndim >= 2 else positions
+    pos = pos.astype(jnp.int32)
+    if S < T:
+        k, v, pos = k[:, T - S:], v[:, T - S:], pos[T - S:]
+        T = S
+    qk, sk = _quant(k)
+    qv, sv = _quant(v)
+    idx = (pos % S).astype(jnp.int32)
+    return QuantKVCache(
+        k=cache.k.at[:, idx].set(qk), v=cache.v.at[:, idx].set(qv),
+        k_scale=cache.k_scale.at[:, idx].set(sk),
+        v_scale=cache.v_scale.at[:, idx].set(sv),
+        slot_pos=cache.slot_pos.at[:, idx].set(pos[None, :]),
+    )
+
+
+def attention_decode_quant(p, x, cache: QuantKVCache, pos, *, cfg,
+                           window: int):
+    """One-token decode against an int8 cache (dequantize-on-read)."""
+    B = x.shape[0]
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    S = cache.k.shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    pos_arr = pos_b[:, None]
+    q, k_new, v_new = _project_qkv(
+        p, x, cfg,
+        jnp.broadcast_to(pos_arr, (3, B, 1)) if cfg.mrope else pos_arr)
+
+    qk, sk = _quant(k_new[:, 0])
+    qv, sv = _quant(v_new[:, 0])
+    slot = pos_b % S
+    bidx = jnp.arange(B)
+    cache = QuantKVCache(
+        k=cache.k.at[bidx, slot].set(qk),
+        v=cache.v.at[bidx, slot].set(qv),
+        k_scale=cache.k_scale.at[bidx, slot].set(sk),
+        v_scale=cache.v_scale.at[bidx, slot].set(sv),
+        slot_pos=cache.slot_pos.at[bidx, slot].set(pos_b),
+    )
+
+    qh = q.reshape(B, KV, G, hd) / math.sqrt(hd)
+    # int8 dot then per-slot rescale: scores[b,K,g,s] = (q . k_q) * k_scale
+    s = jnp.einsum("bKgh,bsKh->bKgs", qh.astype(jnp.float32),
+                   cache.k.astype(jnp.float32))
+    s = s * jnp.moveaxis(cache.k_scale, 1, 2)[:, :, None, :]  # (B,KV,1,S)
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos_b[:, None])
+    if window > 0:
+        valid &= cache.slot_pos > (pos_b[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    wv = w * jnp.moveaxis(cache.v_scale, 1, 2)[:, :, None, :]
+    out = jnp.einsum("bKgs,bsKh->bKgh", wv, cache.v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype):
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attention(p, x, enc_kv, *, cfg):
+    """x: (B, T, d) decoder states; enc_kv: precomputed (k, v) from encoder
+    output, each (B, Te, KV, hd)."""
+    B, T, _ = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    k, v = enc_kv
+    q = (x @ p["wq"]).reshape(B, T, KV, G, hd) / math.sqrt(hd)
+    s = jnp.einsum("bqKgh,bsKh->bKgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgqs,bsKh->bKgqh", w, v.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1).reshape(B, T, H * hd).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def encoder_kv(p, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    B, Te, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, Te, KV, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Te, KV, hd)
+    return k, v

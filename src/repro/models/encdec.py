@@ -1,0 +1,192 @@
+"""Encoder-decoder assembly (seamless-m4t family).
+
+Encoder: bidirectional transformer over precomputed frontend frame
+embeddings (the speech frontend is a STUB per the assignment — see
+DESIGN.md §5).  Decoder: causal self-attention + cross-attention to the
+encoder memory.  Both stacks scan over stacked layer params.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn
+from .layers import (dense_init, dtype_of, embed_init, mask_vocab,
+                     mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
+                     stack_layer_params)
+
+
+class EncDecModel:
+    def __init__(self, cfg):
+        assert cfg.enc_layers > 0
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def _enc_layer_init(self, key):
+        cfg, dt = self.cfg, dtype_of(self.cfg)
+        k1, k2 = jax.random.split(key)
+        return {"ln1": rmsnorm_init(cfg.d_model, dt),
+                "attn": attn.attn_init(k1, cfg, dt),
+                "ln2": rmsnorm_init(cfg.d_model, dt),
+                "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt)}
+
+    def _dec_layer_init(self, key):
+        cfg, dt = self.cfg, dtype_of(self.cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"ln1": rmsnorm_init(cfg.d_model, dt),
+                "attn": attn.attn_init(k1, cfg, dt),
+                "lnx": rmsnorm_init(cfg.d_model, dt),
+                "xattn": attn.cross_attn_init(k2, cfg, dt),
+                "ln2": rmsnorm_init(cfg.d_model, dt),
+                "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dt)}
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, dtype_of(self.cfg)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": embed_init(k1, cfg.vocab_padded, cfg.d_model, dt),
+            "frontend_proj": dense_init(k2, cfg.d_model, cfg.d_model, dt),
+            "enc_layers": stack_layer_params(self._enc_layer_init, k3,
+                                             cfg.enc_layers),
+            "enc_ln_f": rmsnorm_init(cfg.d_model, dt),
+            "dec_layers": stack_layer_params(self._dec_layer_init, k4,
+                                             cfg.n_layers),
+            "ln_f": rmsnorm_init(cfg.d_model, dt),
+        }
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frames, *, remat=True, q_chunk=512,
+               kv_chunk=1024, for_grad=True):
+        """frames: (B, Te, d) precomputed frontend embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(dtype_of(cfg)) @ params["frontend_proj"]
+        B, Te, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32), (B, Te))
+
+        def body(x, p):
+            h = rmsnorm(p["ln1"], x)
+            a, _ = attn.attention_full(p["attn"], h, pos, cfg=cfg, window=0,
+                                       causal=False, q_chunk=q_chunk,
+                                       kv_chunk=kv_chunk,
+                                       unroll_q=for_grad)
+            x = x + a
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.mlp)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = lax.scan(body, x, params["enc_layers"])
+        return rmsnorm(params["enc_ln_f"], x)
+
+    # -- decoder -------------------------------------------------------------
+    def _decode_stack(self, params, x, positions, enc_out, *, remat, q_chunk,
+                      kv_chunk, collect_kv=False, for_grad=True):
+        cfg = self.cfg
+
+        def body(x, p):
+            h = rmsnorm(p["ln1"], x)
+            a, kv = attn.attention_full(p["attn"], h, positions, cfg=cfg,
+                                        window=cfg.window, q_chunk=q_chunk,
+                                        kv_chunk=kv_chunk,
+                                        unroll_q=for_grad)
+            x = x + a
+            enc_kv = attn.encoder_kv(p["xattn"], enc_out, cfg)
+            x = x + attn.cross_attention(p["xattn"], rmsnorm(p["lnx"], x),
+                                         enc_kv, cfg=cfg)
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.mlp)
+            return x, kv if collect_kv else None
+
+        if remat:
+            body = jax.checkpoint(body)
+        return lax.scan(body, x, params["dec_layers"])
+
+    def forward(self, params, tokens, frames, *, remat=True, q_chunk=512,
+                kv_chunk=1024, for_grad=True):
+        cfg = self.cfg
+        enc_out = self.encode(params, frames, remat=remat, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk, for_grad=for_grad)
+        x = params["embed"][tokens]
+        B, T, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, _ = self._decode_stack(params, x, pos, enc_out, remat=remat,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                  for_grad=for_grad)
+        x = rmsnorm(params["ln_f"], x)
+        from repro.dist import hints as _hints
+        logits = _hints.constrain(x @ params["embed"].T, "logits")
+        return logits.astype(jnp.float32)
+
+    def loss(self, params, batch, *, remat=True, q_chunk=512, kv_chunk=1024,
+             **_):
+        logits = self.forward(params, batch["tokens"], batch["frontend"],
+                              remat=remat, q_chunk=q_chunk, kv_chunk=kv_chunk)
+        logits = mask_vocab(logits, self.cfg.vocab)
+        t = batch["targets"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        ce = (lse - gold).mean()
+        return ce, {"ce": ce, "aux": jnp.float32(0)}
+
+    # -- serving ---------------------------------------------------------------
+    def prefill(self, params, tokens, frames, *, max_len, q_chunk=512,
+                kv_chunk=1024):
+        """Encode + run prompt through decoder, build self-attn caches and
+        precompute per-layer cross KV."""
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        enc_out = self.encode(params, frames, remat=False, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk, for_grad=False)
+        x = params["embed"][tokens]
+        B, T, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, kvs = self._decode_stack(params, x, pos, enc_out, remat=False,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                    collect_kv=True, for_grad=False)
+        x = rmsnorm(params["ln_f"], x)
+        logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+        logits = logits[:, :cfg.vocab]
+        caches = []
+        cross_kv = []
+        positions = jnp.arange(T, dtype=jnp.int32)[None]
+        for li in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[li], params["dec_layers"])
+            c = attn.cache_init(cfg, B, max_len, dt)
+            caches.append(attn.cache_fill_from_prefill(
+                c, kvs[0][li], kvs[1][li], positions))
+            cross_kv.append(attn.encoder_kv(p["xattn"], enc_out, cfg))
+        return logits, {"self": caches, "cross": cross_kv}, jnp.int32(T)
+
+    def decode_state(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        Te = cfg.frontend_len
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        caches = [attn.cache_init(cfg, batch, max_len, dt)
+                  for _ in range(cfg.n_layers)]
+        cross = [(jnp.zeros((batch, Te, KV, hd), dt),
+                  jnp.zeros((batch, Te, KV, hd), dt))
+                 for _ in range(cfg.n_layers)]
+        return {"self": caches, "cross": cross}
+
+    def decode_step(self, params, caches, token, pos):
+        cfg = self.cfg
+        x = params["embed"][token][:, None, :]
+        new_self = []
+        for li in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[li], params["dec_layers"])
+            h = rmsnorm(p["ln1"], x)
+            a, c = attn.attention_decode(p["attn"], h, caches["self"][li],
+                                         pos, cfg=cfg, window=cfg.window)
+            new_self.append(c)
+            x = x + a
+            x = x + attn.cross_attention(p["xattn"], rmsnorm(p["lnx"], x),
+                                         caches["cross"][li], cfg=cfg)
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.mlp)
+        x = rmsnorm(params["ln_f"], x)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits[:, 0, :cfg.vocab], {"self": new_self,
+                                          "cross": caches["cross"]}

@@ -1,0 +1,295 @@
+"""Hybrid (zamba2) and recurrent (xLSTM) model assemblies.
+
+zamba2: a backbone of Mamba2 layers with ONE weight-shared attention block
+applied every ``attn_every`` layers.  The mamba stack scans in groups of
+``attn_every`` layers; between groups the shared block (same params every
+time) runs with a sliding-window KV cache.
+
+xLSTM: per-layer block pattern ("m" = mLSTM block, "s" = sLSTM block +
+FFN).  Both are recurrent; decode carries per-layer states and no KV cache
+— the long_500k story for this family.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn
+from . import ssm
+from .layers import (dtype_of, embed_init, mask_vocab, mlp_apply,
+                     mlp_init, rmsnorm, rmsnorm_init, stack_layer_params)
+
+
+class Zamba2Model:
+    def __init__(self, cfg):
+        assert cfg.attn_every > 0 and cfg.ssm_state > 0
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        assert cfg.n_layers % cfg.attn_every == 0, \
+            "n_layers must divide attn_every groups"
+
+    def _mamba_layer_init(self, key):
+        cfg, dt = self.cfg, dtype_of(self.cfg)
+        return {"ln": rmsnorm_init(cfg.d_model, dt),
+                "mamba": ssm.mamba2_init(key, cfg, dt)}
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, dtype_of(self.cfg)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": embed_init(k1, cfg.vocab_padded, cfg.d_model, dt),
+            "layers": stack_layer_params(self._mamba_layer_init, k2,
+                                         cfg.n_layers),
+            # the single shared attention block (+ its own mlp, zamba-style)
+            "shared": {
+                "ln1": rmsnorm_init(cfg.d_model, dt),
+                "attn": attn.attn_init(k3, cfg, dt),
+                "ln2": rmsnorm_init(cfg.d_model, dt),
+                "mlp": mlp_init(k4, cfg.d_model, cfg.d_ff, cfg.mlp, dt),
+            },
+            "ln_f": rmsnorm_init(cfg.d_model, dt),
+        }
+
+    def _group_params(self, params, g):
+        a = self.cfg.attn_every
+        return jax.tree.map(lambda p: p[g * a:(g + 1) * a], params["layers"])
+
+    def forward(self, params, tokens, extra_embeds=None, *, remat=True,
+                q_chunk=512, kv_chunk=1024, collect_kv=False,
+                for_grad=True, **_):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B, T, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def mamba_body(x, p):
+            h, _ = ssm.mamba2_forward(p["mamba"], rmsnorm(p["ln"], x), cfg)
+            return x + h, None
+
+        if remat:
+            mamba_body = jax.checkpoint(mamba_body)
+
+        kvs = []
+        sp = params["shared"]
+        for g in range(self.n_groups):
+            x, _ = lax.scan(mamba_body, x, self._group_params(params, g))
+            a, kv = attn.attention_full(sp["attn"], rmsnorm(sp["ln1"], x),
+                                        pos, cfg=cfg, window=cfg.window,
+                                        q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                        unroll_q=for_grad)
+            x = x + a
+            x = x + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], x), cfg.mlp)
+            if collect_kv:
+                kvs.append(kv)
+        x = rmsnorm(params["ln_f"], x)
+        from repro.dist import hints as _hints
+        logits = _hints.constrain(x @ params["embed"].T, "logits")
+        return logits.astype(jnp.float32), kvs, jnp.float32(0)
+
+    def loss(self, params, batch, *, remat=True, q_chunk=512, kv_chunk=1024,
+             **_):
+        logits, _, _ = self.forward(params, batch["tokens"], remat=remat,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+        logits = mask_vocab(logits, self.cfg.vocab)
+        t = batch["targets"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        ce = (lse - gold).mean()
+        return ce, {"ce": ce, "aux": jnp.float32(0)}
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, tokens, extra_embeds=None, *, max_len,
+                q_chunk=512, kv_chunk=1024):
+        """Prefill is a forward pass that also harvests (a) final mamba
+        states per layer and (b) shared-block KV per group."""
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        x = params["embed"][tokens]
+        B, T, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        positions = jnp.arange(T, dtype=jnp.int32)[None]
+
+        def mamba_body(carry, p):
+            x = carry
+            h, S = ssm.mamba2_forward(p["mamba"], rmsnorm(p["ln"], x), cfg)
+            return x + h, S
+
+        sp = params["shared"]
+        mamba_states: List = []
+        caches = []
+        cap = min(cfg.window, max_len) if cfg.window > 0 else max_len
+        for g in range(self.n_groups):
+            x, S_stack = lax.scan(mamba_body, x, self._group_params(params, g))
+            # conv states are not tracked through prefill scan; rebuild the
+            # decode conv history from the last ssm_conv-1 inputs is omitted
+            # for the stub serving path (documented simplification): decode
+            # restarts conv history at zeros.
+            mamba_states.append(S_stack)
+            a, kv = attn.attention_full(sp["attn"], rmsnorm(sp["ln1"], x),
+                                        pos, cfg=cfg, window=cfg.window,
+                                        q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                        unroll_q=False)
+            c = attn.cache_init(cfg, B, cap, dt)
+            caches.append(attn.cache_fill_from_prefill(c, kv[0], kv[1],
+                                                       positions))
+            x = x + a
+            x = x + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], x), cfg.mlp)
+        x = rmsnorm(params["ln_f"], x)
+        logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+        logits = logits[:, :cfg.vocab]
+        state = {"mamba_S": mamba_states,
+                 "conv": [jnp.zeros((B, cfg.ssm_conv - 1,
+                                     cfg.ssm_expand * cfg.d_model
+                                     + 2 * cfg.ssm_state), dt)
+                          for _ in range(cfg.n_layers)],
+                 "kv": caches}
+        return logits, state, jnp.int32(T)
+
+    def decode_state(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        din = cfg.ssm_expand * cfg.d_model
+        H = din // cfg.ssm_head_dim
+        cap = min(cfg.window, max_len) if cfg.window > 0 else max_len
+        return {
+            "mamba_S": [jnp.zeros((cfg.attn_every, batch, H, cfg.ssm_state,
+                                   cfg.ssm_head_dim), jnp.float32)
+                        for _ in range(self.n_groups)],
+            "conv": [jnp.zeros((batch, cfg.ssm_conv - 1,
+                                din + 2 * cfg.ssm_state), dt)
+                     for _ in range(cfg.n_layers)],
+            "kv": [attn.cache_init(cfg, batch, cap, dt)
+                   for _ in range(self.n_groups)],
+        }
+
+    def decode_step(self, params, state, token, pos):
+        cfg = self.cfg
+        a_every = cfg.attn_every
+        x = params["embed"][token][:, None, :]
+        sp = params["shared"]
+        new_S = []
+        new_conv = []
+        new_kv = []
+        for g in range(self.n_groups):
+            S_stack = state["mamba_S"][g]
+            S_new_stack = []
+            for j in range(a_every):
+                li = g * a_every + j
+                p = jax.tree.map(lambda t: t[j], self._group_params(params, g))
+                ms = ssm.MambaState(S=S_stack[j], conv=state["conv"][li])
+                h, ms2 = ssm.mamba2_decode(p["mamba"], rmsnorm(p["ln"], x),
+                                           ms, cfg)
+                x = x + h
+                S_new_stack.append(ms2.S)
+                new_conv.append(ms2.conv)
+            new_S.append(jnp.stack(S_new_stack))
+            a, c = attn.attention_decode(sp["attn"], rmsnorm(sp["ln1"], x),
+                                         state["kv"][g], pos, cfg=cfg,
+                                         window=cfg.window)
+            new_kv.append(c)
+            x = x + a
+            x = x + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], x), cfg.mlp)
+        x = rmsnorm(params["ln_f"], x)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits[:, 0, :cfg.vocab], {"mamba_S": new_S, "conv": new_conv,
+                                          "kv": new_kv}
+
+
+class XLSTMModel:
+    def __init__(self, cfg):
+        assert cfg.block_pattern, "xlstm needs a block pattern"
+        self.cfg = cfg
+        pattern = list(cfg.block_pattern)
+        while len(pattern) < cfg.n_layers:
+            pattern += list(cfg.block_pattern)
+        self.pattern = pattern[:cfg.n_layers]
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, dtype_of(self.cfg)
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        layers = []
+        for i, kind in enumerate(self.pattern):
+            k1, k2 = jax.random.split(keys[i])
+            if kind == "m":
+                layers.append({"kind_m": {
+                    "ln": rmsnorm_init(cfg.d_model, dt),
+                    "cell": ssm.mlstm_init(k1, cfg, dt)}})
+            else:
+                layers.append({"kind_s": {
+                    "ln": rmsnorm_init(cfg.d_model, dt),
+                    "cell": ssm.slstm_init(k1, cfg, dt),
+                    "ln2": rmsnorm_init(cfg.d_model, dt),
+                    "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp,
+                                    dt)}})
+        return {
+            "embed": embed_init(keys[-2], cfg.vocab_padded, cfg.d_model, dt),
+            "layers": layers,   # heterogeneous: python list, not stacked
+            "ln_f": rmsnorm_init(cfg.d_model, dt),
+        }
+
+    def _apply_layer(self, p, kind, x, states, li, decode=False):
+        cfg = self.cfg
+        if kind == "m":
+            q = p["kind_m"]
+            fn = ssm.mlstm_decode if decode else ssm.mlstm_forward
+            if decode:
+                h, st = fn(q["cell"], rmsnorm(q["ln"], x), states[li], cfg)
+            else:
+                h, st = fn(q["cell"], rmsnorm(q["ln"], x), cfg)
+            return x + h, st
+        q = p["kind_s"]
+        if decode:
+            h, st = ssm.slstm_decode(q["cell"], rmsnorm(q["ln"], x),
+                                     states[li], cfg)
+        else:
+            h, st = ssm.slstm_forward(q["cell"], rmsnorm(q["ln"], x), cfg)
+        x = x + h
+        x = x + mlp_apply(q["mlp"], rmsnorm(q["ln2"], x), cfg.mlp)
+        return x, st
+
+    def forward(self, params, tokens, extra_embeds=None, **_):
+        x = params["embed"][tokens]
+        states = [None] * self.cfg.n_layers
+        for li, (p, kind) in enumerate(zip(params["layers"], self.pattern)):
+            x, states[li] = self._apply_layer(p, kind, x, states, li)
+        x = rmsnorm(params["ln_f"], x)
+        return (x @ params["embed"].T).astype(jnp.float32), states, \
+            jnp.float32(0)
+
+    def loss(self, params, batch, **_):
+        logits, _, _ = self.forward(params, batch["tokens"])
+        logits = mask_vocab(logits, self.cfg.vocab)
+        t = batch["targets"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        ce = (lse - gold).mean()
+        return ce, {"ce": ce, "aux": jnp.float32(0)}
+
+    def prefill(self, params, tokens, extra_embeds=None, *, max_len, **_):
+        logits, states, _ = self.forward(params, tokens)
+        return logits[:, -1, :self.cfg.vocab], states, \
+            jnp.int32(tokens.shape[1])
+
+    def decode_state(self, batch: int, max_len: int):
+        cfg = self.cfg
+        states = []
+        for kind in self.pattern:
+            if kind == "m":
+                states.append(ssm.mlstm_state_init(cfg, batch, cfg.d_model))
+            else:
+                states.append(ssm.slstm_state_init(cfg, batch, cfg.d_model))
+        return states
+
+    def decode_step(self, params, states, token, pos):
+        x = params["embed"][token][:, None, :]
+        new_states = list(states)
+        for li, (p, kind) in enumerate(zip(params["layers"], self.pattern)):
+            x, new_states[li] = self._apply_layer(p, kind, x, states, li,
+                                                  decode=True)
+        x = rmsnorm(params["ln_f"], x)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits[:, 0, :self.cfg.vocab], new_states

@@ -1,0 +1,142 @@
+"""Shared neural-net layers for the architecture zoo (pure JAX pytrees).
+
+Parameters are plain nested dicts of jnp arrays — no framework.  Per-layer
+parameters are stacked on a leading axis so models can ``lax.scan`` over
+layers (keeps HLO size O(1) in depth — critical when compiling 88-layer
+models for 512 devices).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def stack_layer_params(init_fn: Callable, key, n_layers: int):
+    """vmap an init over layer keys -> pytree with leading (L, ...) axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0,
+                sections=(0.25, 0.375, 0.375)):
+    """Qwen2-VL multimodal RoPE: the head dim is split into (temporal, h, w)
+    sections, each rotated by its own position id stream.
+
+    x: (B, T, H, hd); positions3: (3, B, T) — for pure text all three
+    streams are equal and M-RoPE reduces to RoPE exactly.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    secs = [int(round(s * half)) for s in sections]
+    secs[-1] = half - secs[0] - secs[1]
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    # build per-frequency position ids by section
+    sec_id = jnp.concatenate([
+        jnp.full((secs[0],), 0), jnp.full((secs[1],), 1),
+        jnp.full((secs[2],), 2)]).astype(jnp.int32)     # (half,)
+    # (B, T, half): pick the position stream per frequency slot
+    pos_bt3 = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # (B,T,3)
+    pos_slot = pos_bt3[..., sec_id]                     # (B, T, half)
+    angles = pos_slot * freqs                           # (B, T, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wg": dense_init(k1, d, ff, dtype),
+                "wu": dense_init(k2, d, ff, dtype),
+                "wd": dense_init(k3, ff, d, dtype)}
+    return {"w1": dense_init(k1, d, ff, dtype),
+            "w2": dense_init(k2, ff, d, dtype)}
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        return h @ p["wd"]
+    h = x @ p["w1"]
+    if kind == "relu2":                  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]
+
+
+def mlp_flops(cfg, tokens: int) -> int:
+    mats = 3 if cfg.mlp == "swiglu" else 2
+    return 2 * mats * cfg.d_model * cfg.d_ff * tokens
+
+
+def mask_vocab(logits, vocab: int):
+    """Mask padded vocab logits (cfg.vocab_padded > cfg.vocab) to -inf."""
+    V = logits.shape[-1]
+    if V == vocab:
+        return logits
+    return jnp.where(jnp.arange(V) < vocab, logits, -1e30)

@@ -1,0 +1,62 @@
+"""Model registry: config -> model instance, plus input_specs for dry-runs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given (arch, shape) cell — weak-type-correct, shardable,
+zero allocation — used by launch/dryrun.py and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .encdec import EncDecModel
+from .hybrid import XLSTMModel, Zamba2Model
+from .transformer import DecoderModel
+
+
+def build_model(cfg, *, kv_quant: bool = False):
+    if cfg.is_encdec:
+        return EncDecModel(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2Model(cfg)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    return DecoderModel(cfg, kv_quant=kv_quant)  # dense | moe | vlm
+
+
+def input_specs(cfg, shape, *, kind=None):
+    """ShapeDtypeStructs for a (arch x shape) cell.
+
+    train:   {"tokens", "targets"[, "frontend"]}
+    prefill: {"tokens"[, "frontend"]}
+    decode:  {"token" (B,), "pos" ()} — the KV cache/state is built by the
+             serve harness (see launch/dryrun.py serve_state_specs).
+    """
+    kind = kind or shape.kind
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    # decoder-only frontend models prepend F patch/frame embeddings, so the
+    # token stream is T-F and the total sequence length is exactly T; the
+    # enc-dec frontend is the encoder memory and does not shorten tokens.
+    F = cfg.frontend_len if (cfg.frontend != "none"
+                             and not cfg.is_encdec) else 0
+    specs = {}
+    if kind == "train":
+        specs["tokens"] = sds((B, T - F), i32)
+        specs["targets"] = sds((B, T - F), i32)
+        if cfg.frontend != "none":
+            specs["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), f32)
+    elif kind == "prefill":
+        specs["tokens"] = sds((B, T - F), i32)
+        if cfg.frontend != "none":
+            specs["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), f32)
+    elif kind == "decode":
+        specs["token"] = sds((B,), i32)
+        specs["pos"] = sds((), i32)
+    else:
+        raise ValueError(kind)
+    return specs

@@ -1,0 +1,380 @@
+"""State-space blocks: Mamba2 (chunked SSD) and xLSTM (mLSTM / sLSTM).
+
+Mamba2 follows the SSD (state-space duality) chunked algorithm: within a
+chunk the recurrence is computed as a masked quadratic form (attention-like,
+MXU-friendly); across chunks a short ``lax.scan`` carries the (H, P, N)
+state.  Decode is the O(1) recurrent update.
+
+mLSTM is implemented with the same chunkwise machinery (it is a
+gated-linear-attention recurrence with scalar per-head decay); sLSTM has a
+true nonlinear recurrence (hidden state feeds the gates) and admits no
+chunked form — it runs as ``lax.scan`` over time, which is the honest
+hardware story for that block (DESIGN.md §2).
+
+Correctness of the chunked paths is pinned to ``*_sequential_ref`` oracles
+in tests/test_ssm.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    conv_ch = din + 2 * N
+    ks = jax.random.split(key, 6)
+    return {
+        # fused in-projection: [z (din), x (din), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], d, 2 * din + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),           # A = -exp(A_log)
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),                # skip connection
+        "norm_scale": jnp.ones((din,), dtype),
+        "w_out": dense_init(ks[2], din, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_in(p, x, cfg):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    proj = x @ p["w_in"]
+    z, rest = proj[..., :din], proj[..., din:]
+    xbc, dt = rest[..., :din + 2 * N], rest[..., din + 2 * N:]
+    return z, xbc, dt, din, N, H
+
+
+def _gated_out(p, y, z, cfg):
+    din = y.shape[-1]
+    y = y * jax.nn.silu(z)
+    # RMS norm over din
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * lax.rsqrt(var + 1e-6)).astype(y.dtype) * p["norm_scale"]
+    return y @ p["w_out"]
+
+
+def _segsum(a):
+    """Cumulative-sum decay matrix: out[..., i, j] = sum_{j<m<=i} a[..., m]
+    for i>=j, -inf otherwise."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_(j..i]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(p, x, cfg, *, chunk: int = 128):
+    """Chunked SSD forward.  x: (B, T, d) -> (B, T, d); T % chunk free."""
+    B, T, d = x.shape
+    z, xbc, dt, din, N, H = _split_in(p, x, cfg)
+    P = cfg.ssm_head_dim
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :din].reshape(B, T, H, P)
+    Bm = xbc[..., din:din + N]                           # (B, T, N)
+    Cm = xbc[..., din + N:]                              # (B, T, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                             # (H,)
+    dA = dt * A                                          # (B, T, H)
+
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // Q
+    xs_c = xs.reshape(B, nc, Q, H, P)
+    B_c = Bm.reshape(B, nc, Q, N)
+    C_c = Cm.reshape(B, nc, Q, N)
+    dA_c = dA.reshape(B, nc, Q, H)
+    dt_c = dt.reshape(B, nc, Q, H)
+
+    # intra-chunk (quadratic, attention-like)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA_c, -1, -2)))     # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", C_c, B_c)     # (B,nc,Q,Q)
+    M = scores[:, :, None] * L                           # (B,nc,H,Q,Q)
+    xdt = xs_c * dt_c[..., None]                         # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xdt.astype(jnp.float32))
+
+    # chunk states: S_c = sum_i exp(cum_end - cum_i) dt_i B_i x_i^T
+    cum = jnp.cumsum(dA_c, axis=2)                       # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                         B_c, (dt_c * decay_to_end).astype(jnp.float32),
+                         xs_c.astype(jnp.float32))       # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    # inter-chunk scan over nc
+    def scan_body(S_prev, inp):
+        S_c, gamma, C_ck, cum_k = inp
+        # contribution of carried state to this chunk's outputs
+        decay_in = jnp.exp(cum_k)                        # (B,Q,H)
+        y_in = jnp.einsum("bqn,bhnp,bqh->bqhp", C_ck, S_prev, decay_in)
+        S_new = gamma[..., None, None] * S_prev + S_c
+        return S_new, y_in
+
+    S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs_scan = (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+               jnp.moveaxis(C_c, 1, 0), jnp.moveaxis(cum, 1, 0))
+    S_last, y_inter = lax.scan(scan_body, S0, xs_scan)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(B, T + pad, H, P)[:, :T]
+    y = y + xs[:, :T] * p["D"][None, None, :, None]
+    y = y.reshape(B, T, din).astype(x.dtype)
+    return _gated_out(p, y, z, cfg), S_last
+
+
+def mamba2_sequential_ref(p, x, cfg):
+    """O(T) sequential oracle for the chunked path (tests only)."""
+    B, T, d = x.shape
+    z, xbc, dt, din, N, H = _split_in(p, x, cfg)
+    P = cfg.ssm_head_dim
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :din].reshape(B, T, H, P)
+    Bm, Cm = xbc[..., din:din + N], xbc[..., din + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    def step(S, t):
+        dA_t = jnp.exp(dt[:, t] * A)                     # (B,H)
+        S = S * dA_t[..., None, None]
+        S = S + jnp.einsum("bn,bh,bhp->bhnp", Bm[:, t], dt[:, t],
+                           xs[:, t].astype(jnp.float32))
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, t], S)
+        return S, y
+
+    S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = lax.scan(step, S0, jnp.arange(T))
+    y = jnp.moveaxis(ys, 0, 1)                           # (B,T,H,P)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B, T, din).astype(x.dtype)
+    return _gated_out(p, y, z, cfg)
+
+
+class MambaState(NamedTuple):
+    S: jax.Array        # (B, H, N, P) ssm state
+    conv: jax.Array     # (B, K-1, C) conv history
+
+
+def mamba2_state_init(cfg, batch: int, dtype) -> MambaState:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    return MambaState(
+        S=jnp.zeros((batch, H, N, cfg.ssm_head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * N), dtype),
+    )
+
+
+def mamba2_decode(p, x, state: MambaState, cfg):
+    """One-token recurrent update.  x: (B, 1, d)."""
+    B = x.shape[0]
+    z, xbc, dt, din, N, H = _split_in(p, x, cfg)
+    P = cfg.ssm_head_dim
+    # conv with history
+    hist = jnp.concatenate([state.conv, xbc], axis=1)    # (B, K, C)
+    conv_out = (hist * p["conv_w"][None]).sum(axis=1, keepdims=True)
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"])           # (B,1,C)
+    new_conv = hist[:, 1:]
+    xs = xbc1[..., :din].reshape(B, H, P)
+    Bm = xbc1[:, 0, din:din + N]
+    Cm = xbc1[:, 0, din + N:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * A)                                # (B,H)
+    S = state.S * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm, dt1, xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    out = _gated_out(p, y, z, cfg)
+    return out, MambaState(S=S, conv=new_conv)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunk-free scan with stabilized exponential gating)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wi": dense_init(ks[3], d, H, jnp.float32),   # input gate (exp)
+        "wf": dense_init(ks[4], d, H, jnp.float32),   # forget gate
+        "wo": dense_init(ks[5], d, d, dtype),
+        "og": jnp.zeros((d,), dtype),                 # output gate bias-ish
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd) matrix memory
+    n: jax.Array   # (B, H, hd) normalizer
+    m: jax.Array   # (B, H) stabilizer
+
+
+def mlstm_state_init(cfg, batch, d_model=None):
+    d = d_model or cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def _mlstm_step(p_unused, carry, qkvif):
+    C, n, m = carry
+    q, k, v, i_t, f_t = qkvif   # q,k,v: (B,H,hd); i,f: (B,H)
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])               # (B,H,hd,hd)
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_forward(p, x, cfg):
+    """x: (B, T, d) -> (B, T, d); scan over time (recurrent block)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x @ p["wq"]).reshape(B, T, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    i_t = (x.astype(jnp.float32) @ p["wi"])              # (B,T,H)
+    f_t = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["wf"])
+
+    st = mlstm_state_init(cfg, B, d)
+
+    def step(carry, t_in):
+        return _mlstm_step(None, carry, t_in)
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_t, 1, 0),
+          jnp.moveaxis(f_t, 1, 0))
+    (C, n, m), hs = lax.scan(step, (st.C, st.n, st.m), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(x.dtype)
+    h = h * jax.nn.sigmoid(x @ p["wo"] + p["og"])        # gated output
+    return h, MLSTMState(C, n, m)
+
+
+def mlstm_decode(p, x, state: MLSTMState, cfg):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x[:, 0] @ p["wq"]).reshape(B, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (x[:, 0] @ p["wk"]).reshape(B, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (x[:, 0] @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    i_t = x[:, 0].astype(jnp.float32) @ p["wi"]
+    f_t = jax.nn.log_sigmoid(x[:, 0].astype(jnp.float32) @ p["wf"])
+    (C, n, m), h = _mlstm_step(None, (state.C, state.n, state.m),
+                               (q, k, v, i_t, f_t))
+    h = h.reshape(B, 1, d).astype(x.dtype)
+    h = h * jax.nn.sigmoid(x @ p["wo"] + p["og"])
+    return h, MLSTMState(C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, true nonlinear recurrence -> honest scan)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "wz": dense_init(ks[0], d, d, dtype),
+        "wi": dense_init(ks[1], d, d, jnp.float32),
+        "wf": dense_init(ks[2], d, d, jnp.float32),
+        "wo": dense_init(ks[3], d, d, dtype),
+        "r": (jax.random.normal(ks[4], (d,)) * 0.1).astype(jnp.float32),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+    h: jax.Array   # (B, d)
+
+
+def slstm_state_init(cfg, batch, d_model=None):
+    d = d_model or cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, d), -1e30, jnp.float32),
+                      h=z)
+
+
+def _slstm_step(p, carry, xt):
+    c, n, m, h = carry
+    rec = h * p["r"]                                     # diagonal recurrence
+    z = jnp.tanh(xt @ p["wz"] + rec.astype(xt.dtype))
+    i_t = xt.astype(jnp.float32) @ p["wi"] + rec
+    f_t = jax.nn.log_sigmoid(xt.astype(jnp.float32) @ p["wf"] + rec)
+    o = jax.nn.sigmoid(xt @ p["wo"])
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c = f_p * c + i_p * z.astype(jnp.float32)
+    n = f_p * n + i_p
+    h_new = (c / jnp.maximum(n, 1.0)) * o.astype(jnp.float32)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_forward(p, x, cfg):
+    B, T, d = x.shape
+    st = slstm_state_init(cfg, B, d)
+
+    def step(carry, xt):
+        return _slstm_step(p, carry, xt)
+
+    (c, n, m, h), hs = lax.scan(step, (st.c, st.n, st.m, st.h),
+                                jnp.moveaxis(x, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return out, SLSTMState(c, n, m, h)
+
+
+def slstm_decode(p, x, state: SLSTMState, cfg):
+    (c, n, m, h), out = _slstm_step(p, (state.c, state.n, state.m, state.h),
+                                    x[:, 0])
+    return out[:, None].astype(x.dtype), SLSTMState(c, n, m, h)

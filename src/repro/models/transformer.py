@@ -1,0 +1,313 @@
+"""Decoder-only LM assembly (families: dense, moe, vlm).
+
+Layers are stacked on a leading axis and traversed with ``lax.scan`` (one
+block in HLO regardless of depth) with ``jax.checkpoint`` remat per block.
+Per-layer attention windows ride along as scan xs, which is how gemma3's
+5:1 local:global pattern stays inside a single homogeneous scan.
+
+Decode uses a Python loop over layers instead (tiny per-layer compute, and
+it lets local layers keep W-slot ring buffers while global layers keep
+full-length caches — the memory story for long_500k).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn
+from . import moe as moe_mod
+from .layers import (dense_init, dtype_of, embed_init, mask_vocab,
+                     mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
+                     stack_layer_params)
+
+
+def _onehot_embed(tokens, embed, chunk: int = 512):
+    """Embedding lookup as a chunked one-hot matmul (collective-friendly)."""
+    B, T = tokens.shape
+    V, d = embed.shape
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    nc = (T + pad) // c
+    toks = tokens.reshape(B, nc, c).transpose(1, 0, 2)   # (nc, B, c)
+
+    def body(_, tok_chunk):
+        oh = jax.nn.one_hot(tok_chunk, V, dtype=embed.dtype)
+        return None, jnp.einsum("bcv,vd->bcd", oh, embed)
+
+    _, xs = lax.scan(body, None, toks)                   # (nc, B, c, d)
+    x = xs.transpose(1, 0, 2, 3).reshape(B, nc * c, d)
+    return x[:, :T]
+
+
+def layer_windows(cfg) -> list:
+    """Static per-layer window sizes (0 = full attention)."""
+    if cfg.local_global_ratio > 0:
+        period = cfg.local_global_ratio + 1
+        return [cfg.local_window if (i % period) != cfg.local_global_ratio
+                else 0 for i in range(cfg.n_layers)]
+    return [cfg.window] * cfg.n_layers
+
+
+class DecoderModel:
+    """Dense / MoE / VLM decoder-only language model."""
+
+    def __init__(self, cfg, *, kv_quant: bool = False):
+        self.cfg = cfg
+        self.windows = layer_windows(cfg)
+        self.kv_quant = kv_quant  # int8 KV cache (§Perf decode hillclimb)
+
+    # -- params ------------------------------------------------------------
+    def _layer_init(self, key):
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "ln1": rmsnorm_init(cfg.d_model, dt),
+            "attn": attn.attn_init(k1, cfg, dt),
+            "ln2": rmsnorm_init(cfg.d_model, dt),
+        }
+        if cfg.n_experts:
+            p["moe"] = moe_mod.moe_init(k2, cfg, dt)
+        else:
+            p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dt)
+        return p
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        k_emb, k_layers, k_fe = jax.random.split(key, 3)
+        params = {
+            "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dt),
+            "layers": stack_layer_params(self._layer_init, k_layers,
+                                         cfg.n_layers),
+            "ln_f": rmsnorm_init(cfg.d_model, dt),
+        }
+        if cfg.frontend != "none":
+            # multimodal stub adapter: precomputed frontend embeddings in
+            # d_model are passed through one learned projection.
+            params["frontend_proj"] = dense_init(k_fe, cfg.d_model,
+                                                 cfg.d_model, dt)
+        return params
+
+    # -- shared pieces -------------------------------------------------------
+    def _positions(self, B, T, offset=0):
+        pos = jnp.arange(T, dtype=jnp.int32)[None, :] + offset
+        pos = jnp.broadcast_to(pos, (B, T))
+        if not self.cfg.mrope:
+            return pos
+        # M-RoPE stub streams: frontend patches get (t, h, w) grid ids,
+        # text gets equal streams (== plain RoPE for text positions).
+        F = self.cfg.frontend_len
+        t_ids = pos
+        h_ids = jnp.where(pos < F, pos // 16, pos)
+        w_ids = jnp.where(pos < F, pos % 16, pos)
+        return jnp.stack([t_ids, h_ids, w_ids])          # (3, B, T)
+
+    def _embed_tokens(self, params, tokens, extra_embeds):
+        cfg = self.cfg
+        from repro.dist import hints as _hints
+
+        if _hints.get("onehot_embed"):
+            # one-hot matmul lookup (chunked over T): GSPMD partitions dots
+            # cleanly, whereas a gather from a sharded table triggers
+            # involuntary full rematerialization of the embedding — the
+            # §Perf iteration-1 lever (MaxText's use_iota_embed trick).
+            x = _onehot_embed(tokens, params["embed"])
+        else:
+            x = params["embed"][tokens]
+        if cfg.frontend != "none" and extra_embeds is not None:
+            fe = extra_embeds.astype(x.dtype) @ params["frontend_proj"]
+            x = jnp.concatenate([fe, x], axis=1)
+        # canonical activation layout (batch over DP axes): without this,
+        # the embed lookup's output sharding leaks into every layer's saved
+        # residuals (§Perf iteration 1)
+        return _hints.constrain(x, "activations")
+
+    def _block(self, p, x, positions, window, *, q_chunk, kv_chunk,
+               block_skip=True, unroll_q=False):
+        cfg = self.cfg
+        h = rmsnorm(p["ln1"], x)
+        a, kv = attn.attention_full(p["attn"], h, positions, cfg=cfg,
+                                    window=window, q_chunk=q_chunk,
+                                    kv_chunk=kv_chunk, block_skip=block_skip,
+                                    unroll_q=unroll_q)
+        x = x + a
+        m = rmsnorm(p["ln2"], x)
+        if cfg.n_experts:
+            mo, aux = moe_mod.moe_apply(p["moe"], m, cfg)
+            x = x + mo
+        else:
+            x = x + mlp_apply(p["mlp"], m, cfg.mlp)
+            aux = jnp.float32(0)
+        return x, kv, aux
+
+    # -- full-sequence forward (train / prefill) -----------------------------
+    def forward(self, params, tokens, extra_embeds=None, *, remat=True,
+                collect_kv=False, q_chunk=512, kv_chunk=1024,
+                block_skip=True, logits_f32=True, for_grad=True):
+        """tokens: (B, T) int32.  Returns (logits, stacked_kv|None, aux).
+
+        ``for_grad=True`` (training) unrolls the q-chunk loop so the KV
+        block-skip bounds are static — reverse-differentiable AND causal/
+        window FLOPs-proportional.  Layers with a periodic window pattern
+        (gemma3 5:1) scan over *periods* with the phase unrolled, keeping
+        every window a Python int.
+        """
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens, extra_embeds)
+        B, T, _ = x.shape
+        positions = self._positions(B, T)
+        windows = self.windows
+        period = (cfg.local_global_ratio + 1
+                  if cfg.local_global_ratio > 0 else 1)
+        L = cfg.n_layers
+        n_full, rem = L // period, L % period
+
+        def phase_body(x, p, w):
+            return self._block(p, x, positions, w, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, block_skip=block_skip,
+                               unroll_q=for_grad)
+
+        def body(x, p_grp):
+            kvs, auxs = [], []
+            for ph in range(period):
+                p = jax.tree.map(lambda a: a[ph], p_grp) if period > 1 \
+                    else p_grp
+                x, kv, aux = phase_body(x, p, windows[ph])
+                kvs.append(kv)
+                auxs.append(aux)
+            if collect_kv:
+                kv_out = kvs[0] if period == 1 else \
+                    jax.tree.map(lambda *t: jnp.stack(t), *kvs)
+            else:
+                kv_out = None
+            return x, (kv_out, jnp.stack(auxs).sum())
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        kvs = None
+        aux_total = jnp.float32(0)
+        if n_full > 0:
+            main = params["layers"]
+            if period > 1:
+                main = jax.tree.map(
+                    lambda a: a[:n_full * period].reshape(
+                        (n_full, period) + a.shape[1:]), params["layers"])
+            x, (kvs, auxs) = lax.scan(body, x, main)
+            aux_total = auxs.sum()
+            if collect_kv and period > 1:
+                # (n_full, period, B, T, KV, hd) -> (n_full*period, ...)
+                kvs = jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), kvs)
+
+        # remainder layers (periodic patterns whose depth % period != 0)
+        if rem:
+            rem_kvs = []
+            for j in range(rem):
+                p = jax.tree.map(lambda a: a[n_full * period + j],
+                                 params["layers"])
+                x, kv, aux = phase_body(x, p, windows[n_full * period + j])
+                rem_kvs.append(kv)
+                aux_total = aux_total + aux
+            if collect_kv:
+                rem_stack = jax.tree.map(lambda *t: jnp.stack(t), *rem_kvs)
+                kvs = rem_stack if kvs is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0),
+                    kvs, rem_stack)
+
+        x = rmsnorm(params["ln_f"], x)
+        logits = x @ params["embed"].T                   # tied head
+        from repro.dist import hints as _hints
+        logits = _hints.constrain(logits, "logits")
+        if logits_f32:
+            logits = logits.astype(jnp.float32)
+        return logits, kvs, aux_total
+
+    def loss(self, params, batch, *, remat=True, q_chunk=512, kv_chunk=1024,
+             block_skip=True, aux_weight=0.01):
+        """batch: {"tokens": (B,T), "targets": (B,T), optional "frontend"}.
+        Frontend positions are excluded from the loss."""
+        cfg = self.cfg
+        logits, _, aux = self.forward(
+            params, batch["tokens"], batch.get("frontend"), remat=remat,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, block_skip=block_skip)
+        targets = batch["targets"]
+        F = cfg.frontend_len if (cfg.frontend != "none"
+                                 and "frontend" in batch) else 0
+        logits = mask_vocab(logits[:, F:], cfg.vocab)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+        ce = (lse - gold).mean()
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+    # -- serving --------------------------------------------------------------
+    def cache_capacities(self, max_len: int) -> list:
+        return [min(w, max_len) if w > 0 else max_len for w in self.windows]
+
+    def prefill(self, params, tokens, extra_embeds=None, *, max_len: int,
+                q_chunk=512, kv_chunk=1024):
+        """Run the full prompt, build per-layer caches sized for max_len.
+        Returns (last-token logits, caches, next_pos)."""
+        cfg = self.cfg
+        logits, kvs, _ = self.forward(params, tokens, extra_embeds,
+                                      remat=False, collect_kv=True,
+                                      q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                      for_grad=False)
+        B = tokens.shape[0]
+        T = logits.shape[1]
+        dt = dtype_of(cfg)
+        positions = jnp.arange(T, dtype=jnp.int32)[None]
+        caches = []
+        for li, cap in enumerate(self.cache_capacities(max_len)):
+            if self.kv_quant:
+                c = attn.quant_cache_init(cfg, B, cap)
+                caches.append(attn.quant_cache_fill_from_prefill(
+                    c, kvs[0][li], kvs[1][li], positions))
+            else:
+                c = attn.cache_init(cfg, B, cap, dt)
+                caches.append(attn.cache_fill_from_prefill(
+                    c, kvs[0][li], kvs[1][li], positions))
+        return logits[:, -1, :cfg.vocab], caches, jnp.int32(T)
+
+    def decode_state(self, batch: int, max_len: int):
+        """Zero-initialized decode caches (dry-run eval_shape target)."""
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        if self.kv_quant:
+            return [attn.quant_cache_init(cfg, batch, cap)
+                    for cap in self.cache_capacities(max_len)]
+        return [attn.cache_init(cfg, batch, cap, dt)
+                for cap in self.cache_capacities(max_len)]
+
+    def decode_step(self, params, caches, token, pos):
+        """token: (B,) int32; pos: scalar or (B,).  Python loop over layers."""
+        cfg = self.cfg
+        x = params["embed"][token][:, None, :]           # (B, 1, d)
+        new_caches = []
+        for li in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[li], params["layers"])
+            h = rmsnorm(p["ln1"], x)
+            dec = attn.attention_decode_quant if self.kv_quant \
+                else attn.attention_decode
+            a, c = dec(p["attn"], h, caches[li], pos,
+                       cfg=cfg, window=self.windows[li])
+            new_caches.append(c)
+            x = x + a
+            m = rmsnorm(p["ln2"], x)
+            if cfg.n_experts:
+                mo, _ = moe_mod.moe_apply(p["moe"], m, cfg)
+                x = x + mo
+            else:
+                x = x + mlp_apply(p["mlp"], m, cfg.mlp)
+        x = rmsnorm(params["ln_f"], x)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits[:, 0, :cfg.vocab], new_caches

@@ -1,0 +1,1 @@
+"""Serving substrate: KV-cache decode, continuous-batching engine."""

@@ -1,0 +1,137 @@
+"""Batched serving engine with continuous batching.
+
+Slot-based scheduler over the model's (prefill, decode_step) pair:
+
+  * fixed ``n_slots`` concurrent sequences share one decode batch;
+  * finished/empty slots are refilled from the request queue by running a
+    single-sequence prefill and splicing its cache into the batch cache at
+    the slot index (``_splice``);
+  * every engine step is one batched ``decode_step`` — the decode_32k
+    shape is exactly one engine step at batch 128.
+
+The engine is deliberately model-agnostic: caches are arbitrary pytrees
+(attention KVCache, mamba states, xlstm states) and splicing is a pure
+tree map over the batch axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (T,) int32
+    max_new_tokens: int = 16
+    frontend: Optional[np.ndarray] = None
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _splice(batch_tree: Any, single_tree: Any, slot: int) -> Any:
+    """Write a batch-1 cache pytree into slot ``slot`` of a batched one.
+
+    KVCache.slot_pos (no batch axis) and scalar leaves pass through from
+    the single tree only when they are batch-free; we detect the batch
+    axis by leading-dim match against the batched leaf.
+    """
+
+    def leaf(b, s):
+        if b.ndim >= 1 and s.ndim == b.ndim and s.shape[0] == 1 \
+                and b.shape[1:] == s.shape[1:]:
+            return jax.lax.dynamic_update_slice(
+                b, s.astype(b.dtype), (slot,) + (0,) * (b.ndim - 1))
+        return b  # batch-free leaf (slot_pos etc.): keep batched version
+
+    return jax.tree.map(leaf, batch_tree, single_tree)
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, n_slots: int = 4,
+                 max_len: int = 256, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.caches = None           # batched cache pytree
+        self.pos = jnp.int32(0)      # NOTE: per-slot pos tracked host-side
+        self.slot_pos = [0] * n_slots
+        self.steps = 0
+
+    # -- queue management ---------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_one(self, req: Request):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        args = (self.params, tokens)
+        kwargs = dict(max_len=self.max_len)
+        if req.frontend is not None:
+            args = (self.params, tokens, jnp.asarray(req.frontend)[None])
+        logits, cache, pos = self.model.prefill(*args, **kwargs)
+        next_tok = jnp.argmax(logits[:, :self.cfg.vocab], -1)[0]
+        return int(next_tok), cache, int(pos)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                tok, cache, pos = self._prefill_one(req)
+                req.output.append(tok)
+                self.active[slot] = req
+                self.slot_pos[slot] = pos
+                self.tokens = self.tokens.at[slot].set(tok)
+                if self.caches is None:
+                    # materialize the batched cache from the first request
+                    self.caches = jax.tree.map(
+                        lambda s: jnp.concatenate([s] * self.n_slots, axis=0)
+                        if (s.ndim >= 1 and s.shape[0] == 1) else s, cache)
+                else:
+                    self.caches = _splice(self.caches, cache, slot)
+
+    # -- stepping -------------------------------------------------------------
+    def step(self) -> int:
+        """One continuous-batching step; returns #active sequences."""
+        self._admit()
+        live = [s for s in range(self.n_slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        # single batched decode (all slots step together; empty slots are
+        # harmless — their outputs are discarded); per-slot positions let
+        # sequences at different depths share the batch.
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.caches = self.model.decode_step(
+            self.params, self.caches, self.tokens, pos)
+        next_tokens = np.asarray(jnp.argmax(logits, -1))
+        for s in live:
+            req = self.active[s]
+            tok = int(next_tokens[s])
+            req.output.append(tok)
+            self.slot_pos[s] += 1
+            if (tok == self.eos_id
+                    or len(req.output) >= req.max_new_tokens):
+                req.done = True
+                self.active[s] = None
+            else:
+                self.tokens = self.tokens.at[s].set(tok)
+        self.steps += 1
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        while (self.queue or any(self.active)) and self.steps < max_steps:
+            self.step()
+        return done

@@ -1,0 +1,2 @@
+"""Training substrate: AdamW, microbatched train step, fault-tolerant
+checkpointing, elastic scaling."""

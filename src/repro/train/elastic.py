@@ -1,0 +1,97 @@
+"""Elastic scaling + straggler mitigation (the 1000-node runbook).
+
+* :func:`remesh` — move a (params, opt_state) pytree onto a different mesh
+  (device count changed after a failure): recompute shardings against the
+  new mesh and ``device_put``.  Combined with checkpoint.restore(...,
+  shardings=new), this is the restart path: a job checkpointed on 512
+  chips resumes on 448 after losing a host.
+
+* :class:`StragglerMonitor` — per-step wall-time tracker with robust
+  (median/MAD) outlier detection.  On real pods each host feeds its step
+  time; a straggling host triggers (a) an alert, (b) data-shard
+  rebalancing away from it, and (c) eventual eviction + remesh.  The
+  detection logic is host-side and identical at any scale; tests inject
+  synthetic step-time traces.
+
+* :class:`HeartbeatRegistry` — liveness bookkeeping for the launcher
+  (launch/cluster.py): hosts check in every step; missing N beats marks a
+  host dead and trips the elastic-restart path.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist import sharding as sh
+
+
+def remesh(tree: Any, new_mesh: Mesh) -> Any:
+    """Reshard a pytree onto a new mesh using the standard param rules."""
+    shardings = sh.param_shardings(tree, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+@dataclass
+class StragglerMonitor:
+    """Flags hosts whose step time is a robust outlier."""
+
+    window: int = 32
+    threshold: float = 4.0           # MAD multiples
+    history: Dict[int, deque] = field(default_factory=dict)
+
+    def record(self, host: int, step_time: float) -> None:
+        self.history.setdefault(host, deque(maxlen=self.window)).append(
+            step_time)
+
+    def medians(self) -> Dict[int, float]:
+        out = {}
+        for h, times in self.history.items():
+            s = sorted(times)
+            out[h] = s[len(s) // 2]
+        return out
+
+    def stragglers(self) -> List[int]:
+        meds = self.medians()
+        if len(meds) < 2:
+            return []
+        vals = sorted(meds.values())
+        global_med = vals[len(vals) // 2]
+        mad = sorted(abs(v - global_med) for v in vals)[len(vals) // 2]
+        scale = max(mad, 0.05 * global_med, 1e-9)
+        return [h for h, v in meds.items()
+                if (v - global_med) / scale > self.threshold]
+
+    def rebalance_weights(self, n_hosts: int) -> List[float]:
+        """Relative data-shard weights: stragglers get proportionally less
+        work (the launcher feeds these into the data pipeline)."""
+        meds = self.medians()
+        if not meds:
+            return [1.0] * n_hosts
+        fallback = sorted(meds.values())[len(meds) // 2]
+        inv = [1.0 / meds.get(h, fallback) for h in range(n_hosts)]
+        s = sum(inv)
+        return [w * n_hosts / s for w in inv]
+
+
+@dataclass
+class HeartbeatRegistry:
+    timeout: float = 60.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host: int, now: Optional[float] = None) -> None:
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return [h for h, seen in self.last_seen.items()
+                if t - seen > self.timeout]
+
+    def alive_count(self, now: Optional[float] = None) -> int:
+        return len(self.last_seen) - len(self.dead_hosts(now))

@@ -1,0 +1,76 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (pure pytree ops).
+
+Optimizer state shards exactly like its parameters (dist/sharding.py), so
+ZeRO-style partitioning falls out of the in_shardings on the train step.
+Moments are fp32 regardless of param dtype (mixed-precision convention).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def schedule(step, *, lr: float, warmup_steps: int, total_steps: int):
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return lr * warm * (0.1 + 0.9 * cos)   # decay to 10% of peak
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply(params, grads, state: AdamWState, run_cfg, *, b1=0.9, b2=0.95,
+          eps=1e-8):
+    """One AdamW update; returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(step, lr=run_cfg.lr, warmup_steps=run_cfg.warmup_steps,
+                  total_steps=run_cfg.total_steps)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, run_cfg.grad_clip / (gnorm + 1e-9)) \
+        if run_cfg.grad_clip > 0 else 1.0
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        delta = delta + run_cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), metrics

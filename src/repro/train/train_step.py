@@ -1,0 +1,87 @@
+"""The jit'd train step: microbatched grad accumulation + AdamW.
+
+Microbatching (``run_cfg.microbatches``) reshapes the global batch to
+(M, B/M, ...) and accumulates grads with a ``lax.scan`` — this is what
+keeps the (tokens × vocab) logits buffer inside HBM at the 4k×256 train
+shape (DESIGN.md §6), and it doubles as the compute/comm overlap window:
+XLA's latency-hiding scheduler overlaps microbatch k's backward with
+microbatch k-1's gradient reduce-scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist import compression
+from . import optimizer
+
+
+def _split_microbatches(batch: Dict[str, Any], m: int):
+    def leaf(x):
+        B = x.shape[0]
+        assert B % m == 0, f"batch {B} % microbatches {m} != 0"
+        return x.reshape((m, B // m) + x.shape[1:])
+
+    return jax.tree.map(leaf, batch)
+
+
+def make_train_step(model, run_cfg, *, loss_kwargs: Optional[dict] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Jit this with in_shardings from dist/sharding.py; everything inside is
+    GSPMD-partitioned from those annotations.
+    """
+    loss_kwargs = dict(loss_kwargs or {})
+    m = max(1, run_cfg.microbatches)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, **loss_kwargs)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if m == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, m)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = lax.scan(accum, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = loss_sum / m
+            metrics = {}
+
+        if run_cfg.compress_grads:
+            grads = compression.compress_tree(grads)
+
+        params, opt_state, opt_metrics = optimizer.apply(
+            params, grads, opt_state, run_cfg)
+        out = {"loss": loss, **opt_metrics}
+        out.update({k: v for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_eval_step(model, *, loss_kwargs: Optional[dict] = None):
+    loss_kwargs = dict(loss_kwargs or {})
+
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, **loss_kwargs)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,24 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own 512-device
+# flag in a subprocess); make sure nothing leaks in from the environment.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def clustered_similarity(n, k=4, L=64, noise=0.8, seed=0):
+    """Labelled clustered correlation matrix helper shared across tests."""
+    from repro.data.timeseries import make_dataset
+
+    X, labels = make_dataset(n, L, k, noise=noise, seed=seed)
+    return np.corrcoef(X), X, labels

@@ -1,0 +1,65 @@
+"""APSP: exact min-plus vs Dijkstra oracle; hub approximation properties."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import clustered_similarity
+import repro.core.apsp as A
+from repro.core import tmfg_ref as R
+
+
+def _setup(n=100, seed=1):
+    S, _, _ = clustered_similarity(n, seed=seed)
+    tm = R.tmfg_lazy(S)
+    W = A.edge_lengths(n, jnp.asarray(tm.edges), jnp.asarray(S))
+    Wnp = np.asarray(W, dtype=np.float64)
+    D_ref = R.dijkstra_apsp(np.where(np.isfinite(Wnp) & (Wnp > 0), Wnp, np.inf))
+    return W, D_ref
+
+
+def test_exact_matches_dijkstra():
+    W, D_ref = _setup(90)
+    D = np.asarray(A.apsp_exact(W))
+    np.testing.assert_allclose(D, D_ref, atol=1e-4)
+
+
+def test_edge_lengths_metric():
+    n = 40
+    S, _, _ = clustered_similarity(n, seed=2)
+    tm = R.tmfg_lazy(S)
+    W = np.asarray(A.edge_lengths(n, jnp.asarray(tm.edges), jnp.asarray(S)))
+    assert (np.diag(W) == 0).all()
+    finite = np.isfinite(W)
+    np.fill_diagonal(finite, False)
+    assert finite.sum() == 2 * (3 * n - 6)      # symmetric edge set
+    assert (W[finite] >= 0).all() and (W[finite] <= 2.0 + 1e-6).all()
+
+
+def test_hub_upper_bound_and_accuracy():
+    W, D_ref = _setup(120, seed=3)
+    D = np.asarray(A.apsp_hub(W))
+    assert (D - D_ref >= -1e-4).all(), "hub estimate must upper-bound truth"
+    rel = (D - D_ref) / np.maximum(D_ref, 1e-9)
+    np.fill_diagonal(rel, 0)
+    assert rel.mean() < 0.15, f"mean rel err too high: {rel.mean()}"
+    assert (rel < 1e-6).mean() > 0.5, "most pairs should be exact"
+    assert np.allclose(np.diag(D), 0)
+    np.testing.assert_allclose(D, D.T, atol=1e-5)
+
+
+def test_hub_more_hubs_monotone():
+    """More hubs can only tighten the estimate."""
+    W, D_ref = _setup(80, seed=4)
+    D8 = np.asarray(A.apsp_hub(W, n_hubs=8))
+    D32 = np.asarray(A.apsp_hub(W, n_hubs=32))
+    err8 = (D8 - D_ref).sum()
+    err32 = (D32 - D_ref).sum()
+    assert err32 <= err8 + 1e-3
+
+
+def test_hub_exact_when_all_hubs():
+    W, D_ref = _setup(40, seed=5)
+    D = np.asarray(A.apsp_hub(W, n_hubs=40, rounds=64))
+    np.testing.assert_allclose(D, D_ref, atol=1e-4)

@@ -1,0 +1,84 @@
+"""DBHT structure tests: bubble tree, directions, converging bubbles, labels."""
+
+import numpy as np
+import pytest
+
+from conftest import clustered_similarity
+import repro.core.dbht as D
+from repro.core import tmfg_ref as R
+from repro.core.ari import ari
+
+
+@pytest.fixture(scope="module")
+def setup():
+    S, X, labels = clustered_similarity(100, k=4, seed=11)
+    tm = R.tmfg_lazy(S)
+    res = D.dbht(S, tm, apsp_method="exact")
+    return S, tm, res, labels
+
+
+def test_euler_tour_valid(setup):
+    _, tm, _, _ = setup
+    tin, tout = D._euler_tour(tm.bubble_parent)
+    B = len(tm.bubble_parent)
+    assert sorted(tin.tolist()) == list(range(B))
+    for b in range(1, B):
+        p = tm.bubble_parent[b]
+        assert tin[p] < tin[b] and tout[b] <= tout[p]
+
+
+def test_every_vertex_clustered(setup):
+    _, tm, res, _ = setup
+    n = 100
+    assert res.cluster_of.shape == (n,)
+    assert (res.cluster_of >= 0).all()
+    assert res.cluster_of.max() == len(res.converging) - 1
+    # all converging ids used
+    assert set(np.unique(res.cluster_of)) == set(range(len(res.converging)))
+
+
+def test_converging_bubbles_have_no_outgoing(setup):
+    _, tm, res, _ = setup
+    B = len(tm.bubble_parent)
+    direction = np.concatenate([[0], res.direction])
+    out = [[] for _ in range(B)]
+    for b in range(1, B):
+        p = tm.bubble_parent[b]
+        if direction[b] == 1:
+            out[p].append(b)
+        else:
+            out[b].append(p)
+    for c in res.converging:
+        assert not out[c], f"converging bubble {c} has outgoing edges"
+    # and every non-converging bubble has at least one outgoing edge
+    conv = set(res.converging.tolist())
+    for b in range(B):
+        if b not in conv:
+            assert out[b], f"non-converging bubble {b} lacks outgoing edges"
+
+
+def test_bubble_assignment_in_own_cluster(setup):
+    _, tm, res, _ = setup
+    # each vertex's fine bubble must belong to its coarse cluster's basin
+    direction = np.concatenate([[0], res.direction])
+    dest, conv = D._flow_to_converging(tm.bubble_parent, direction)
+    conv_index = {int(c): i for i, c in enumerate(conv)}
+    for v in range(100):
+        b = res.bubble_of[v]
+        assert conv_index[int(dest[b])] == res.cluster_of[v]
+
+
+def test_labels_shape_and_ari(setup):
+    _, _, res, labels = setup
+    pred = res.labels(4)
+    assert len(np.unique(pred)) == 4
+    a = ari(labels, pred)
+    assert a > 0.2, f"clustered data should cluster: ARI={a}"
+
+
+def test_linkage_well_formed(setup):
+    _, _, res, _ = setup
+    n = 100
+    Z = res.linkage
+    assert Z.shape == (n - 1, 4)
+    assert Z[-1, 3] == n

@@ -1,0 +1,55 @@
+"""Multi-device equivalence of the sharded clustering pipeline.
+
+Runs in a subprocess with --xla_force_host_platform_device_count=8 so the
+main test process keeps its single-device view (see conftest.py).
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8
+    from repro.data.timeseries import make_dataset
+    from repro.core.tmfg import build_tmfg
+    from repro.core import distributed as DD, apsp as A
+
+    mesh = jax.make_mesh((8,), ("data",))
+    X, _ = make_dataset(64, 48, 4, seed=5)
+    S = np.corrcoef(X).astype(np.float32)
+
+    Sp = DD.pearson_sharded(jnp.asarray(X), mesh)
+    np.testing.assert_allclose(np.asarray(Sp), S, atol=3e-5)
+
+    ref = jax.tree.map(np.asarray, build_tmfg(jnp.asarray(S), method="lazy"))
+    for coll in ("batched", "per-element"):
+        got = jax.tree.map(np.asarray, DD.build_tmfg_sharded(
+            jnp.asarray(S), mesh, collectives=coll))
+        assert (ref.insert_order == got.insert_order).all(), coll
+        np.testing.assert_allclose(ref.edge_sum, got.edge_sum, rtol=1e-4)
+
+    W = A.edge_lengths(64, jnp.asarray(ref.edges), jnp.asarray(S))
+    D_ref = np.asarray(A.apsp_hub(W, n_hubs=8, rounds=16))
+    D_sh = np.asarray(DD.apsp_hub_sharded(W, mesh, n_hubs=8, rounds=16))
+    np.testing.assert_allclose(D_sh, D_ref, atol=1e-5)
+    print("SHARDED-OK")
+""")
+
+
+def test_sharded_pipeline_equivalence():
+    import os
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED-OK" in proc.stdout

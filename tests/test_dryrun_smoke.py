@@ -1,0 +1,38 @@
+"""One-cell integration test of the multi-pod dry-run machinery.
+
+Full sweeps run via ``python -m repro.launch.dryrun`` (results/dryrun);
+this test proves the 512-device path end-to-end on the cheapest cell.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def test_dryrun_one_cell():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    with tempfile.TemporaryDirectory() as out:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "xlstm-125m", "--shape", "decode_32k",
+             "--mesh", "multi", "--out", out],
+            capture_output=True, text=True, env=env, timeout=1200)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        rec = json.load(open(
+            os.path.join(out, "xlstm-125m__decode_32k__multi.json")))
+        assert rec["ok"], rec
+        assert rec["n_devices"] == 512
+        assert rec["mesh"] == "2x16x16"
+        ro = rec["roofline"]
+        assert ro["t_memory_s"] > 0 and ro["hlo_flops_per_dev"] > 0
+        assert rec["fits_hbm"] is True
+        # the HLO artifact is archived for §Perf re-analysis
+        assert os.path.exists(os.path.join(
+            out, "xlstm-125m__decode_32k__multi.hlo.gz"))

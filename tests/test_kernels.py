@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps: pallas interpret mode vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.gainscan import masked_argmax_pallas
+from repro.kernels.minplus import minplus_jnp, minplus_pallas
+from repro.kernels.pearson import pearson_pallas
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# minplus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (17, 33, 9), (64, 64, 64),
+                                   (1, 50, 1), (130, 7, 127)])
+@pytest.mark.parametrize("inf_frac", [0.0, 0.3])
+def test_minplus_shapes(m, k, n, inf_frac):
+    A = RNG.uniform(0, 5, (m, k)).astype(np.float32)
+    B = RNG.uniform(0, 5, (k, n)).astype(np.float32)
+    if inf_frac:
+        A[RNG.random(A.shape) < inf_frac] = np.inf
+        B[RNG.random(B.shape) < inf_frac] = np.inf
+    want = ref.minplus_ref(jnp.asarray(A), jnp.asarray(B))
+    got_p = minplus_pallas(jnp.asarray(A), jnp.asarray(B), bm=16, bk=8,
+                           bn=16, interpret=True)
+    got_j = minplus_jnp(jnp.asarray(A), jnp.asarray(B), panel=16)
+    np.testing.assert_allclose(got_p, want, rtol=1e-6)
+    np.testing.assert_allclose(got_j, want, rtol=1e-6)
+
+
+def test_minplus_identity():
+    """min-plus with the tropical identity (0 diag, inf off) is a no-op."""
+    n = 20
+    D = RNG.uniform(0, 9, (n, n)).astype(np.float32)
+    np.fill_diagonal(D, 0)
+    I_trop = np.full((n, n), np.inf, np.float32)
+    np.fill_diagonal(I_trop, 0)
+    got = minplus_pallas(jnp.asarray(D), jnp.asarray(I_trop), bm=8, bk=8,
+                         bn=8, interpret=True)
+    np.testing.assert_allclose(got, D, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pearson
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,L", [(8, 16), (45, 70), (64, 128), (33, 500)])
+def test_pearson_shapes(n, L):
+    X = RNG.normal(size=(n, L)).astype(np.float32)
+    want = np.corrcoef(X)
+    got = pearson_pallas(jnp.asarray(X), bm=16, bn=16, bl=32, interpret=True)
+    np.testing.assert_allclose(got, want, atol=3e-5)
+    np.testing.assert_allclose(ref.pearson_ref(jnp.asarray(X)), want,
+                               atol=3e-5)
+
+
+def test_pearson_constant_row_safe():
+    X = RNG.normal(size=(10, 32)).astype(np.float32)
+    X[3] = 1.0  # zero variance
+    got = np.asarray(pearson_pallas(jnp.asarray(X), bm=8, bn=8, bl=16,
+                                    interpret=True))
+    assert np.isfinite(got).all()
+
+
+# ---------------------------------------------------------------------------
+# masked argmax
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(1, 16), (23, 101), (64, 512), (7, 1000)])
+@pytest.mark.parametrize("mask_frac", [0.0, 0.4, 0.95])
+def test_masked_argmax(m, n, mask_frac):
+    S = RNG.normal(size=(m, n)).astype(np.float32)
+    mask = RNG.random(n) < mask_frac
+    if mask.all():
+        mask[0] = False  # keep at least one valid column
+    want_v, want_i = ref.masked_argmax_ref(jnp.asarray(S), jnp.asarray(mask))
+    got_v, got_i = masked_argmax_pallas(jnp.asarray(S), jnp.asarray(mask),
+                                        bm=8, bn=64, interpret=True)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-6)
+    np.testing.assert_array_equal(got_i, want_i)
+
+
+def test_ops_dispatch():
+    A = jnp.asarray(RNG.uniform(0, 3, (9, 9)).astype(np.float32))
+    for backend in ("jnp", "interpret"):
+        out = ops.minplus(A, A, backend=backend)
+        np.testing.assert_allclose(out, ref.minplus_ref(A, A), rtol=1e-6)
+        S = ops.pearson(A, backend=backend)
+        assert S.shape == (9, 9)
+        v, i = ops.masked_argmax(A, jnp.zeros(9, bool), backend=backend)
+        assert v.shape == (9,)
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40),
+           st.integers(0, 99999))
+    def test_property_minplus_associative_identity(m, k, n, seed):
+        r = np.random.default_rng(seed)
+        A = r.uniform(0, 10, (m, k)).astype(np.float32)
+        B = r.uniform(0, 10, (k, n)).astype(np.float32)
+        got = np.asarray(minplus_jnp(jnp.asarray(A), jnp.asarray(B), panel=8))
+        want = np.asarray(ref.minplus_ref(jnp.asarray(A), jnp.asarray(B)))
+        np.testing.assert_allclose(got, want, rtol=1e-5)

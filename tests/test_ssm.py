@@ -1,0 +1,70 @@
+"""SSM blocks: chunked SSD vs sequential oracle; decode vs forward."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+
+CFG = ModelConfig(name="t", family="hybrid", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=4, d_ff=64, vocab=100, head_dim=8,
+                  ssm_state=16, ssm_head_dim=16, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    p = ssm.mamba2_init(jax.random.PRNGKey(0), CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 37, 32))
+    return p, x
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+def test_mamba2_chunked_matches_sequential(mamba, chunk):
+    p, x = mamba
+    want = ssm.mamba2_sequential_ref(p, x, CFG)
+    got, _ = ssm.mamba2_forward(p, x, CFG, chunk=chunk)
+    np.testing.assert_allclose(got, want, atol=3e-4)
+
+
+def test_mamba2_decode_matches_forward(mamba):
+    p, x = mamba
+    want = ssm.mamba2_sequential_ref(p, x, CFG)
+    st = ssm.mamba2_state_init(CFG, 2, jnp.float32)
+    outs = []
+    for t in range(x.shape[1]):
+        o, st = ssm.mamba2_decode(p, x[:, t:t + 1], st, CFG)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), want, atol=3e-4)
+
+
+@pytest.mark.parametrize("cell", ["mlstm", "slstm"])
+def test_xlstm_decode_matches_forward(cell):
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 25, 32))
+    if cell == "mlstm":
+        p = ssm.mlstm_init(jax.random.PRNGKey(0), CFG, jnp.float32)
+        want, _ = ssm.mlstm_forward(p, x, CFG)
+        st = ssm.mlstm_state_init(CFG, 2, 32)
+        step = ssm.mlstm_decode
+    else:
+        p = ssm.slstm_init(jax.random.PRNGKey(0), CFG, jnp.float32)
+        want, _ = ssm.slstm_forward(p, x, CFG)
+        st = ssm.slstm_state_init(CFG, 2, 32)
+        step = ssm.slstm_decode
+    outs = []
+    for t in range(x.shape[1]):
+        o, st = step(p, x[:, t:t + 1], st, CFG)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), want, atol=3e-4)
+
+
+def test_mamba2_state_decays():
+    """A = -exp(A_log) < 0 ⇒ with zero input the state decays."""
+    p = ssm.mamba2_init(jax.random.PRNGKey(0), CFG, jnp.float32)
+    st = ssm.mamba2_state_init(CFG, 1, jnp.float32)
+    st = ssm.MambaState(S=jnp.ones_like(st.S), conv=st.conv)
+    x = jnp.zeros((1, 1, 32))
+    _, st2 = ssm.mamba2_decode(p, x, st, CFG)
+    assert float(jnp.abs(st2.S).sum()) < float(jnp.abs(st.S).sum())
