@@ -8,6 +8,7 @@ Public API (function names chosen not to shadow submodules):
   apsp_exact / apsp_hub -- all-pairs shortest paths      (module: .apsp)
   complete_linkage      -- vectorized HAC                (module: .hac)
   cluster               -- end-to-end pipeline (OPT-TDBHT by default)
+  cluster_batch         -- batched, data-parallel pipeline (DESIGN.md §7.4)
   adjusted_rand_index   -- ARI metric                    (module: .ari)
 """
 
@@ -16,7 +17,8 @@ from .apsp import apsp_exact, apsp_hub, edge_lengths  # noqa: F401
 from .ari import ari as adjusted_rand_index  # noqa: F401
 from .dbht import DBHTResult, dbht as run_dbht  # noqa: F401
 from .hac import complete_linkage, cut_linkage  # noqa: F401
-from .pipeline import ClusterResult, VARIANTS, cluster  # noqa: F401
+from .pipeline import (BatchClusterResult, ClusterResult,  # noqa: F401
+                       VARIANTS, cluster, cluster_batch)
 from .tmfg import TMFGResult, build_tmfg, tmfg_adjacency  # noqa: F401
 
 # restore submodule attributes clobbered by same-named function imports

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.dist import sharding as dist_sh
 from .tmfg import TMFGResult, _State, _face_pair, _init_state, _insert_one
 
 NEG = -jnp.inf
@@ -43,30 +44,17 @@ NEG = -jnp.inf
 # ---------------------------------------------------------------------------
 
 def _axis_total(mesh: Mesh, axis) -> int:
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    total = 1
-    for a in axes:
-        total *= mesh.shape[a]
-    return total
+    return dist_sh.axis_size(mesh, axis)
 
 
 def pearson_sharded(X: jax.Array, mesh: Mesh, axis="data") -> jax.Array:
     """Pearson correlation with X row-sharded; S returned column-sharded.
 
     Local compute: standardize local rows, all-gather standardized rows
-    (the only collective), then S[:, local] = Z_full @ Z_local^T.
+    (the only collective), then S[:, local] = Z_full @ Z_local^T —
+    implemented once in dist/sharding.py (pearson_shardmap).
     """
-
-    def f(xl):
-        xl = xl.astype(jnp.float32)
-        mu = xl.mean(axis=1, keepdims=True)
-        z = xl - mu
-        z = z / (jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True)) + 1e-12)
-        zf = lax.all_gather(z, axis, tiled=True)          # (n, L)
-        return jnp.clip(zf @ z.T, -1.0, 1.0)              # (n, n/d) local cols
-
-    return jax.shard_map(
-        f, mesh=mesh, in_specs=P(axis, None), out_specs=P(None, axis))(X)
+    return dist_sh.pearson_shardmap(X, mesh, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -190,8 +178,8 @@ def build_tmfg_sharded(S: jax.Array, mesh: Mesh, *, axis="data",
             st = _lazy_loop_sharded(st, lookup, gather, n)
         return _result_of(st)
 
-    out = jax.shard_map(
-        fn, mesh=mesh, in_specs=P(axis, None),
+    out = dist_sh.shard_map(
+        fn, mesh=mesh, in_specs=dist_sh.timeseries_spec(axis),
         out_specs=jax.tree.map(lambda _: P(), _result_spec(n)),
         check_vma=False,
     )(S.T)
@@ -505,6 +493,8 @@ def apsp_hub_sharded(W: jax.Array, mesh: Mesh, *, axis="data",
         est = jnp.minimum(est, W_local)
         return est
 
-    est = jax.shard_map(fn, mesh=mesh, in_specs=(P(axis, None), P()),
-                        out_specs=P(axis, None), check_vma=False)(W, D_h0)
+    est = dist_sh.shard_map(fn, mesh=mesh,
+                        in_specs=(dist_sh.timeseries_spec(axis), P()),
+                        out_specs=dist_sh.timeseries_spec(axis),
+                        check_vma=False)(W, D_h0)
     return est

@@ -9,19 +9,29 @@ Every stage is switchable to reproduce the paper's other variants:
   CORR-TDBHT    -> method="corr",  apsp="exact"
   HEAP-TDBHT    -> method="lazy",  topk=0,   apsp="exact"
   OPT-TDBHT     -> method="lazy",  topk=64,  apsp="hub"   (default)
+
+``cluster_batch()`` is the throughput entry point (DESIGN.md §7.4): a
+batch of B datasets/similarity matrices is clustered data-parallel — the
+device-heavy stages (similarity + TMFG construction) run vmapped with
+the batch axis sharded over the mesh from dist/sharding.py, and the
+host-side DBHT tree logic follows per matrix.  On one device it degrades
+to the vmapped single-device program, bitwise identical to a loop of
+``cluster()`` calls (pinned by tests/test_pipeline.py).
 """
 
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.dist import sharding as dist_sh
 from repro.kernels import ops
 import repro.core.dbht as dbht_mod
 from .tmfg import build_tmfg
@@ -96,3 +106,122 @@ def cluster(X=None, *, S=None, k: Optional[int] = None, method: str = "lazy",
                         dbht=res, edge_sum=float(tm.edge_sum),
                         timings=timings if collect_timings else {})
     return out
+
+
+# ---------------------------------------------------------------------------
+# batched, data-parallel clustering
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchClusterResult:
+    """Results for a batch of B clustered matrices.
+
+    ``labels`` stacks the flat cluster assignments (B, n); ``results``
+    holds the full per-matrix :class:`ClusterResult` objects.
+    """
+
+    labels: np.ndarray                     # (B, n)
+    results: List[ClusterResult]
+    timings: Dict[str, float] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, b: int) -> ClusterResult:
+        return self.results[b]
+
+    def __iter__(self):
+        return iter(self.results)
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _batched_similarity(X: jnp.ndarray, backend: str = "auto") -> jnp.ndarray:
+    """(B, n, L) -> (B, n, n) Pearson, vmapped over the batch axis.
+
+    Per-item math is exactly ``cluster()``'s similarity stage
+    (ops.pearson with the same backend), so a batch entry equals the
+    single-matrix pipeline's similarity bit for bit (GSPMD splits the
+    batched work over the data axis for free when the input carries a
+    batch sharding)."""
+    return jax.vmap(lambda x: ops.pearson(x, backend=backend))(X)
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_tmfg(method: str, prefix: int, topk: int):
+    """Jitted vmapped TMFG build, cached per static config so repeated
+    ``cluster_batch`` calls (the throughput use case) compile once per
+    (method, prefix, topk, batch shape) instead of once per call."""
+    return jax.jit(jax.vmap(
+        lambda s: build_tmfg(s, method=method, prefix=prefix, topk=topk)))
+
+
+def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
+                  method: str = "lazy", prefix: int = 10, topk: int = 64,
+                  apsp_method: str = "hub", backend: str = "auto",
+                  variant: Optional[str] = None, mesh=None,
+                  collect_timings: bool = False) -> BatchClusterResult:
+    """Cluster a batch of datasets X (B, n, L) — or precomputed similarity
+    matrices S (B, n, n) — data-parallel across devices.
+
+    The similarity and TMFG-construction stages run as ONE vmapped jit'd
+    program with the batch axis sharded over ``mesh`` (defaults to a 1-D
+    mesh over all local devices when B divides the device count; falls
+    back to single-device execution otherwise, so CPU CI takes the same
+    code path).  The host-side DBHT stage then walks each matrix.
+
+    Returns a :class:`BatchClusterResult`; entry ``b`` is identical to
+    ``cluster(X[b], ...)``.
+    """
+    if variant is not None:
+        v = dict(VARIANTS[variant])
+        method = v.pop("method")
+        prefix = v.pop("prefix", prefix)
+        topk = v.pop("topk")
+        apsp_method = v.pop("apsp_method")
+
+    timings: Dict[str, float] = {}
+    if S is None:
+        assert X is not None, "need X or S"
+        arr, have_S = jnp.asarray(X, dtype=jnp.float32), False
+    else:
+        arr, have_S = jnp.asarray(S, dtype=jnp.float32), True
+    assert arr.ndim == 3, f"batched input must be 3-D, got {arr.shape}"
+    B = arr.shape[0]
+
+    # place the batch over the mesh's data axes when it divides them;
+    # otherwise stay on the default device (single-device fallback)
+    n_dev = len(jax.devices())
+    if mesh is None and n_dev > 1 and B % n_dev == 0:
+        mesh = dist_sh.data_mesh()
+    if mesh is not None:
+        arr = jax.device_put(arr, dist_sh.batch_shardings(mesh, arr))
+
+    t0 = time.perf_counter()
+    if have_S:
+        S_b = arr
+    else:
+        S_b = jax.block_until_ready(_batched_similarity(arr, backend))
+    timings["similarity"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    tm_b = jax.block_until_ready(
+        _batched_tmfg(method, prefix, topk)(S_b))
+    timings["tmfg"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    S_host = np.asarray(S_b)
+    tm_host = jax.device_get(tm_b)     # ONE transfer, not B x leaves
+    results: List[ClusterResult] = []
+    for b in range(B):
+        tm = jax.tree.map(lambda a, b=b: a[b], tm_host)
+        res = dbht_mod.dbht(S_host[b], tm, apsp_method=apsp_method,
+                            apsp_backend=backend)
+        kk = k if k is not None else len(res.converging)
+        results.append(ClusterResult(
+            labels=res.labels(kk), linkage=res.linkage, tmfg=tm, dbht=res,
+            edge_sum=float(tm.edge_sum), timings={}))
+    timings["dbht+apsp"] = time.perf_counter() - t0
+
+    return BatchClusterResult(
+        labels=np.stack([r.labels for r in results]), results=results,
+        timings=timings if collect_timings else {})

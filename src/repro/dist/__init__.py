@@ -1,0 +1,21 @@
+"""Distribution layer for the TMFG-DBHT system and the LM workload zoo.
+
+Three concerns, three modules (DESIGN.md §7):
+
+* :mod:`repro.dist.sharding` — mesh-aware placement: ``PartitionSpec``
+  rules for parameter pytrees, batched datasets and similarity matrices,
+  plus shard-aware ``shard_map`` wrappers for the Pearson, gain-scan and
+  min-plus kernels.
+* :mod:`repro.dist.compression` — int8 error-feedback gradient
+  compression for the cross-pod (DCN) all-reduce.
+* :mod:`repro.dist.hints` — dynamically-scoped logical-axis annotations:
+  the launcher pins layouts (kv_cache, logits, activations, moe_expert)
+  without threading sharding arguments through every model signature.
+
+Everything degrades to a no-op on a single device so the same library
+code runs on CPU CI and on the production mesh.
+"""
+
+from . import compression, hints, sharding  # noqa: F401
+
+__all__ = ["compression", "hints", "sharding"]

@@ -1,0 +1,90 @@
+"""Dynamically-scoped logical-axis annotations (DESIGN.md §7.3).
+
+Model code marks *logical* tensors by name — ``constrain(x, "kv_cache")``,
+``constrain(buf, "moe_expert")`` — and stays mesh-agnostic.  The launcher
+decides what those names mean for a concrete mesh and scopes the decision
+with the :func:`hints` context manager::
+
+    with hints(kv_cache=NamedSharding(mesh, P(("pod", "data"), "model")),
+               onehot_embed=True):
+        out = jitted_step(params, batch)
+
+Inside the context (which wraps *tracing*, so it composes with ``jax.jit``)
+``constrain`` lowers to ``lax.with_sharding_constraint``; outside it — or
+for names the launcher didn't pin — it is the identity, so library code is
+exactly as portable as before.
+
+Because hints resolve at **trace** time, one jitted callable corresponds
+to one hint binding: re-calling an already-traced jit under different
+bindings hits the jit cache and silently keeps the first trace's
+constraints.  Build a fresh ``jax.jit`` per binding set (as
+launch/dryrun.py does per variant) — do not flip hints under a cached
+jit.  Boolean/value hints (``onehot_embed``)
+are read with :func:`get` and select algorithmic variants whose *layout*
+(not math) depends on the mesh, e.g. the one-hot embedding matmul that
+keeps GSPMD from rematerializing a sharded embedding gather.
+
+Contexts nest; inner bindings shadow outer ones, and binding a name to
+``None`` explicitly un-pins it for the inner scope.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+def current() -> Dict[str, Any]:
+    """The merged hint namespace visible at this point (inner wins)."""
+    merged: Dict[str, Any] = {}
+    for frame in _stack():
+        merged.update(frame)
+    return merged
+
+
+def get(name: str, default: Any = None) -> Any:
+    """Look up a hint by logical name; ``default`` when unbound."""
+    for frame in reversed(_stack()):
+        if name in frame:
+            return frame[name]
+    return default
+
+
+@contextmanager
+def hints(**bindings: Any) -> Iterator[None]:
+    """Bind logical-name -> sharding (or value) hints for the dynamic scope."""
+    _stack().append(dict(bindings))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the sharding hint bound to ``name``, or return ``x`` unchanged.
+
+    The no-op path keeps single-device tests and CPU CI oblivious to the
+    distribution layer; the pinned path is how the launcher kills GSPMD's
+    involuntary replication of large intermediates (DESIGN.md §7.3).
+    """
+    h = get(name)
+    if h is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, h)
+
+
+def sharding_of(name: str) -> Optional[Any]:
+    """The raw hint value for ``name`` (None when unbound) — introspection
+    helper for launchers that want to co-locate derived buffers."""
+    return get(name)

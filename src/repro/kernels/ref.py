@@ -16,13 +16,22 @@ def minplus_ref(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(A[:, :, None] + B[None, :, :], axis=1)
 
 
-def pearson_ref(X: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
-    """Pearson correlation matrix of the rows of X (n, L) -> (n, n)."""
+def standardize_rows(X: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Center and L2-normalize rows so Z @ Z.T is Pearson correlation.
+
+    Shared by the single-device oracle below and the row-sharded
+    ``dist.sharding.pearson_shardmap`` wrapper (each device standardizes
+    its local block with exactly this function)."""
     X = X.astype(jnp.float32)
     mu = X.mean(axis=1, keepdims=True)
     Z = X - mu
     denom = jnp.sqrt(jnp.sum(Z * Z, axis=1, keepdims=True)) + eps
-    Z = Z / denom
+    return Z / denom
+
+
+def pearson_ref(X: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Pearson correlation matrix of the rows of X (n, L) -> (n, n)."""
+    Z = standardize_rows(X, eps)
     return jnp.clip(Z @ Z.T, -1.0, 1.0)
 
 

@@ -56,14 +56,14 @@ SHAPE_KNOBS = {
 
 
 def dp_axes(mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return sh.data_axes(mesh)
 
 
 def _state_sharding_tree(state_sds, mesh, batch: int):
     """Generic decode-state sharding: batch dims over (pod,data); the
     longest remaining dim >= 4096 (sequence) over model (SP)."""
     axes = dp_axes(mesh)
-    dp_total = int(np.prod([mesh.shape[a] for a in axes]))
+    dp_total = sh.axis_size(mesh, axes)
     model = mesh.shape.get("model", 1)
 
     def leaf(x):
@@ -241,7 +241,7 @@ def build_decode(cfg, shape, mesh, knobs, variant: str = "baseline"):
     param_sh = sh.param_shardings(params_sds, mesh)
     state_sh = _state_sharding_tree(state_sds, mesh, B)
     axes = dp_axes(mesh)
-    dp_total = int(np.prod([mesh.shape[a] for a in axes]))
+    dp_total = sh.axis_size(mesh, axes)
     tok_sh = NamedSharding(
         mesh, P(axes) if B % dp_total == 0 and B > 1 else P())
 
@@ -323,7 +323,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
         mem = compiled.memory_analysis()
         print(f"[{tag}] memory_analysis: {mem}")
-        ca = compiled.cost_analysis()
+        ca = hlo_cost.xla_cost_dict(compiled)
         print(f"[{tag}] cost_analysis flops={ca.get('flops')} "
               f"bytes={ca.get('bytes accessed')}")
         hlo_text = compiled.as_text()

@@ -7,7 +7,25 @@ initialization).
 
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+
+def _make(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: ``axis_types`` (explicit-Auto)
+    only exists on newer jax; older releases are Auto-only anyway.  The
+    kwarg is probed from make_mesh's own signature (AxisType existing in
+    jax.sharding does not guarantee make_mesh accepts it — availability
+    and kwarg support landed in different releases)."""
+    kwargs = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if (axis_type is not None
+            and "axis_types" in inspect.signature(jax.make_mesh).parameters):
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,13 +38,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """Arbitrary mesh helper (tests, examples, elastic restarts)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes, devices)

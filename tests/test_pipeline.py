@@ -68,6 +68,49 @@ def test_timings_collected(data):
     assert all(t >= 0 for t in res.timings.values())
 
 
+def test_cluster_batch_matches_single_loop():
+    """DESIGN.md §7.4 acceptance: entry b of cluster_batch is identical to
+    cluster(X[b]) — same labels, same TMFG edge sum."""
+    from repro.core.pipeline import cluster_batch
+
+    Xs = [make_dataset(60, 48, 4, noise=0.7, seed=s)[0] for s in range(3)]
+    bres = cluster_batch(np.stack(Xs), k=4, variant="opt",
+                         collect_timings=True)
+    assert bres.labels.shape == (3, 60) and len(bres) == 3
+    assert set(bres.timings) == {"similarity", "tmfg", "dbht+apsp"}
+    for b, X in enumerate(Xs):
+        single = cluster(X, k=4, variant="opt")
+        np.testing.assert_array_equal(single.labels, bres.labels[b])
+        np.testing.assert_array_equal(single.labels, bres[b].labels)
+        assert bres[b].edge_sum == pytest.approx(single.edge_sum, rel=1e-6)
+
+
+def test_cluster_batch_accepts_custom_mesh_axis_names():
+    """The batch placement must come from the mesh's own axis names, not a
+    hardcoded 'data' (regression: ValueError on user-supplied meshes)."""
+    from repro.core.pipeline import cluster_batch
+    from repro.launch.mesh import make_mesh
+
+    X = np.stack(
+        [make_dataset(48, 40, 3, noise=0.7, seed=s)[0] for s in range(2)])
+    mesh = make_mesh((1,), ("batch",))
+    bres = cluster_batch(X, k=3, variant="opt", mesh=mesh)
+    single = cluster(X[0], k=3, variant="opt")
+    np.testing.assert_array_equal(single.labels, bres.labels[0])
+
+
+def test_cluster_batch_precomputed_similarity():
+    Xs = np.stack(
+        [make_dataset(48, 40, 3, noise=0.7, seed=s)[0] for s in range(2)])
+    S = np.stack([np.corrcoef(x) for x in Xs])
+    from repro.core.pipeline import cluster_batch
+
+    bres = cluster_batch(S=S, k=3, variant="opt")
+    for b in range(2):
+        single = cluster(S=S[b], k=3, variant="opt")
+        np.testing.assert_array_equal(single.labels, bres.labels[b])
+
+
 def test_integration_embedding_clustering():
     """core/integration.py: the LM-facing entry points."""
     from repro.core import integration as I

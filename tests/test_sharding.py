@@ -55,6 +55,24 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+def test_fsdp_narrows_to_widest_axis():
+    """When the full (pod, data) product doesn't divide a dim, narrowing
+    must pick the wide ICI axis (data=16) over the narrow cross-DCN one
+    (pod=2) — regression: picking pod costs 8x per-device memory."""
+    import jax
+    import jax.numpy as jnp
+    from repro.dist import sharding as sh
+    from repro.launch.mesh import make_mesh
+
+    devs = jax.devices() * 64          # fake 64 entries from 1 CPU device
+    mesh = make_mesh((2, 16, 2), ("pod", "data", "model"), devices=devs[:64])
+    # dim0=48: divides data (16) and pod (2) but not pod*data (32)
+    params = {"w": jax.ShapeDtypeStruct((48, 8192), jnp.float32)}
+    spec = sh.param_specs(params, mesh)["w"]
+    assert spec[0] == "data", spec
+    assert spec[1] == "model", spec
+
+
 def test_param_specs_all_archs():
     import os
 
