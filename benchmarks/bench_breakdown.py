@@ -13,7 +13,7 @@ def run(scale: float = 1.0, variants=("par-10", "corr", "heap", "opt")):
     for v in variants:
         res = cluster(ds["X"], k=ds["k"], variant=v, collect_timings=True)
         t = res.timings
-        total = sum(t.values())
+        total = t["total"]
         rows.append(dict(
             name=f"fig5/crop/{v}",
             us_per_call=f"{total * 1e6:.0f}",

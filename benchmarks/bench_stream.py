@@ -1,0 +1,123 @@
+"""Streaming subsystem benchmark (DESIGN.md §10): per-tick similarity
+update vs from-scratch recompute, and end-to-end service throughput.
+
+Two tables:
+
+* ``stream/window`` — the acceptance row: per-tick O(n²) co-moment
+  update + similarity read (window_push / window_similarity) vs the
+  from-scratch O(n²L) ``ops.pearson`` on the materialized window, at the
+  paper-sized (n=1000, L=512) window when ``scale=1``.
+* ``stream/service`` — ClusterService ticks/sec with micro-batched
+  reclustering every ``recluster_every`` ticks, vs calling ``cluster()``
+  from scratch at the same cadence.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import cluster
+from repro.kernels import ops
+from repro.stream import ClusterService
+from repro.stream.window import (materialize, window_init, window_push,
+                                 window_similarity)
+from .common import emit, timeit
+
+
+def _window_rows(scale: float, ticks: int = 32):
+    n = max(48, int(1000 * scale))
+    L = max(32, int(512 * scale))
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, L + ticks)).astype(np.float32)
+
+    st = window_init(n, L)
+    for t in range(L):
+        st = window_push(st, X[:, t])
+    jax.block_until_ready(st.s2)
+
+    # steady-state per-tick cost: push + similarity read, averaged
+    holder = {"st": st, "t": L}
+
+    def one_tick():
+        s = window_push(holder["st"], X[:, holder["t"] % X.shape[1]])
+        holder["st"], holder["t"] = s, holder["t"] + 1
+        return jax.block_until_ready(window_similarity(s))
+
+    t_inc = timeit(one_tick, repeats=ticks, warmup=2)
+
+    W = jnp.asarray(materialize(holder["st"]))
+    t_scratch = timeit(lambda: jax.block_until_ready(ops.pearson(W)),
+                       repeats=5, warmup=1)
+    return [dict(
+        name="stream/window", n=n, L=L,
+        us_per_call=f"{t_inc * 1e6:.0f}",
+        derived=f"speedup={t_scratch / max(t_inc, 1e-9):.2f}",
+        t_tick=f"{t_inc:.5f}", t_scratch=f"{t_scratch:.5f}",
+        ticks_per_s=f"{1.0 / max(t_inc, 1e-9):.0f}",
+    )], t_inc, t_scratch
+
+
+def _service_rows(scale: float, ticks: int = 96, every: int = 16):
+    n = max(48, int(400 * scale))
+    L = max(32, int(128 * scale))
+    from repro.data.timeseries import make_dataset
+    X, _ = make_dataset(n, L + ticks, 4, noise=0.7, seed=1)
+    import time as _time
+
+    def run_service(**kw):
+        svc = ClusterService(n=n, window=L, k=4, variant="opt",
+                             recluster_every=every, **kw)
+        # warm-up: fill the window and take one recluster so jit compile
+        # cost (paid once per deployment) stays out of the steady state
+        for t in range(L):
+            svc.tick(X[:, t])
+        svc.recluster()
+        t0 = _time.perf_counter()
+        for t in range(L, L + ticks):
+            req = svc.tick(X[:, t])
+            if req is not None and not req.done:
+                svc.drain()
+        return svc, _time.perf_counter() - t0
+
+    svc, t_svc = run_service()
+    svc_w, t_warm = run_service(reuse_threshold=0.0, tmfg_threshold=0.05)
+    n_reclusters = max(1, ticks // every)
+
+    # from-scratch baseline: full cluster() at the same cadence (warmed)
+    cluster(X[:, :L], k=4, variant="opt")
+    t0 = _time.perf_counter()
+    for r in range(n_reclusters):
+        end = L + (r + 1) * every
+        cluster(X[:, end - L:end], k=4, variant="opt")
+    t_base = _time.perf_counter() - t0
+
+    def row(tag, svc_i, t):
+        return dict(
+            name=f"stream/{tag}", n=n, L=L,
+            us_per_call=f"{t / ticks * 1e6:.0f}",
+            derived=f"recluster_speedup={t_base / max(t, 1e-9):.2f}",
+            ticks_per_s=f"{ticks / max(t, 1e-9):.0f}",
+            t_service=f"{t:.3f}", t_scratch=f"{t_base:.3f}",
+            reclusters=n_reclusters, warm_hits=svc_i.warm_hits,
+        )
+
+    return [row("service", svc, t_svc), row("service-warm", svc_w, t_warm)]
+
+
+def run(scale: float = 1.0):
+    w_rows, t_inc, t_scratch = _window_rows(scale)
+    rows = w_rows + _service_rows(scale)
+    out = emit(rows, ["name", "n", "L", "us_per_call", "derived",
+                      "ticks_per_s", "t_tick", "t_scratch", "t_service",
+                      "reclusters", "warm_hits"])
+    assert t_inc < t_scratch, (
+        f"incremental tick ({t_inc:.5f}s) must beat from-scratch "
+        f"pearson ({t_scratch:.5f}s)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,7 @@
 """Benchmark driver — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig2,...]
+                                            [--strict] [--json out.json]
 
 Prints ``name,us_per_call,derived`` CSV per section (plus section-specific
 columns).  Sections:
@@ -10,17 +11,23 @@ columns).  Sections:
   fig6  ARI per variant                (bench_ari)
   fig7  edge-sum reduction             (bench_edgesum)
   apsp  exact vs hub APSP              (bench_apsp)
+  stream  streaming window + service   (bench_stream)
   roofline  dry-run roofline table     (roofline; needs results/dryrun)
+
+``--strict`` turns section failures into a nonzero exit code (CI);
+``--json`` writes every section's rows to one JSON file (the CI
+artifact).  Without ``--strict`` failures print and the run continues.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from . import (bench_apsp, bench_ari, bench_breakdown, bench_edgesum,
-               bench_speedup, bench_tmfg, roofline)
+               bench_speedup, bench_stream, bench_tmfg, roofline)
 
 SECTIONS = {
     "fig2": lambda scale: bench_tmfg.run(scale),
@@ -29,28 +36,54 @@ SECTIONS = {
     "fig6": lambda scale: bench_ari.run(scale),
     "fig7": lambda scale: bench_edgesum.run(scale),
     "apsp": lambda scale: bench_apsp.run(scale),
+    "stream": lambda scale: bench_stream.run(scale),
     "roofline": lambda scale: roofline.run(),
 }
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0,
                     help="dataset size multiplier (CPU-sized defaults)")
     ap.add_argument("--only", default="",
                     help="comma-separated section subset")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when any requested section fails")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write section rows as JSON to PATH")
     args = ap.parse_args(argv)
 
     only = [s for s in args.only.split(",") if s] or list(SECTIONS)
+    unknown = [s for s in only if s not in SECTIONS]
+    if unknown:
+        print(f"unknown sections: {unknown}; have {list(SECTIONS)}",
+              file=sys.stderr)
+        return 2
+
+    results, failed = {}, []
     for name in only:
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
-            SECTIONS[name](args.scale)
-        except Exception as e:  # noqa: BLE001 — report and continue
+            results[name] = SECTIONS[name](args.scale)
+        except Exception as e:  # noqa: BLE001 — report, record, continue
+            failed.append(name)
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
             print(f"{name},,SECTION-FAILED:{type(e).__name__}: {e}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"scale": args.scale, "sections": results,
+                       "failed": failed}, f, indent=2, default=str)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    if failed:
+        print(f"# FAILED sections: {','.join(failed)}", file=sys.stderr)
+        if args.strict:
+            return 1
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -45,6 +45,10 @@ class ClusterResult:
     dbht: object
     edge_sum: float
     timings: Dict[str, float] = field(default_factory=dict)
+    # True when the TMFG was carried over from an earlier window
+    # (cluster(reuse_tmfg=...)) rather than built on this similarity —
+    # the stream warm-start cache keys its drift anchoring on this
+    reused_tmfg: bool = False
 
     def labels_at(self, k: int) -> np.ndarray:
         return self.dbht.labels(k)
@@ -60,29 +64,52 @@ VARIANTS = {
 }
 
 
+def resolve_variant(variant: Optional[str], *, method: str = "lazy",
+                    prefix: int = 10, topk: int = 64,
+                    apsp_method: str = "hub"):
+    """(method, prefix, topk, apsp_method) for a named variant — or the
+    caller-supplied values untouched when ``variant`` is None.  The one
+    place the VARIANTS schema is unpacked; every consumer (cluster,
+    cluster_batch, the stream scheduler/service) goes through here."""
+    if variant is None:
+        return method, prefix, topk, apsp_method
+    v = dict(VARIANTS[variant])
+    return (v.pop("method"), v.pop("prefix", prefix), v.pop("topk"),
+            v.pop("apsp_method"))
+
+
 def similarity_from_timeseries(X, *, backend: str = "auto") -> jnp.ndarray:
     """Pearson correlation similarity matrix from row time series."""
     return ops.pearson(jnp.asarray(X), backend=backend)
 
 
-def cluster(X=None, *, S=None, k: Optional[int] = None, method: str = "lazy",
-            prefix: int = 10, topk: int = 64, apsp_method: str = "hub",
-            backend: str = "auto", variant: Optional[str] = None,
+def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
+            method: str = "lazy", prefix: int = 10, topk: int = 64,
+            apsp_method: str = "hub", backend: str = "auto",
+            variant: Optional[str] = None, reuse_tmfg=None,
             collect_timings: bool = False) -> ClusterResult:
     """Cluster time series X (n, L) — or a precomputed similarity S — with
     TMFG-DBHT.  ``k`` cuts the dendrogram into k flat clusters (defaults to
-    the number of converging bubbles)."""
-    if variant is not None:
-        v = dict(VARIANTS[variant])
-        method = v.pop("method")
-        prefix = v.pop("prefix", prefix)
-        topk = v.pop("topk")
-        apsp_method = v.pop("apsp_method")
+    the number of converging bubbles).
+
+    Streaming hooks (DESIGN.md §10): ``moments`` takes a
+    ``repro.stream.window.WindowState`` and derives S from the rolling
+    co-moments in O(n²) instead of the O(n²L) Pearson pass;
+    ``reuse_tmfg`` skips TMFG construction and reruns only the DBHT
+    stage on a previous window's graph (the warm-start path — caller
+    asserts the similarity delta is small enough for the topology to
+    still apply)."""
+    method, prefix, topk, apsp_method = resolve_variant(
+        variant, method=method, prefix=prefix, topk=topk,
+        apsp_method=apsp_method)
 
     timings = {}
     t0 = time.perf_counter()
-    if S is None:
-        assert X is not None, "need X or S"
+    if S is None and moments is not None:
+        from repro.stream.window import window_similarity  # no import cycle
+        S = jax.block_until_ready(window_similarity(moments))
+    elif S is None:
+        assert X is not None, "need X, S or moments"
         S = similarity_from_timeseries(np.asarray(X), backend=backend)
         S = jax.block_until_ready(S)
     else:
@@ -90,21 +117,25 @@ def cluster(X=None, *, S=None, k: Optional[int] = None, method: str = "lazy",
     timings["similarity"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    tm = build_tmfg(S, method=method, prefix=prefix, topk=topk)
-    tm = jax.block_until_ready(tm)
+    if reuse_tmfg is not None:
+        tm = reuse_tmfg
+    else:
+        tm = build_tmfg(S, method=method, prefix=prefix, topk=topk)
+        tm = jax.block_until_ready(tm)
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     res = dbht_mod.dbht(np.asarray(S), tm, apsp_method=apsp_method,
                         apsp_backend=backend)
     timings["dbht+apsp"] = time.perf_counter() - t0
+    timings["total"] = sum(timings.values())
 
-    n = S.shape[0]
     kk = k if k is not None else len(res.converging)
     labels = res.labels(kk)
     out = ClusterResult(labels=labels, linkage=res.linkage, tmfg=tm,
                         dbht=res, edge_sum=float(tm.edge_sum),
-                        timings=timings if collect_timings else {})
+                        timings=timings if collect_timings else {},
+                        reused_tmfg=reuse_tmfg is not None)
     return out
 
 
@@ -159,6 +190,7 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
                   method: str = "lazy", prefix: int = 10, topk: int = 64,
                   apsp_method: str = "hub", backend: str = "auto",
                   variant: Optional[str] = None, mesh=None,
+                  limit: Optional[int] = None,
                   collect_timings: bool = False) -> BatchClusterResult:
     """Cluster a batch of datasets X (B, n, L) — or precomputed similarity
     matrices S (B, n, n) — data-parallel across devices.
@@ -169,15 +201,17 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     back to single-device execution otherwise, so CPU CI takes the same
     code path).  The host-side DBHT stage then walks each matrix.
 
+    ``limit`` materializes host-side results only for the first ``limit``
+    entries: the stream scheduler (DESIGN.md §10.2) pads batches up to a
+    bucket size so the jitted device program is reused, and the pad
+    entries must not pay the per-matrix DBHT walk.
+
     Returns a :class:`BatchClusterResult`; entry ``b`` is identical to
     ``cluster(X[b], ...)``.
     """
-    if variant is not None:
-        v = dict(VARIANTS[variant])
-        method = v.pop("method")
-        prefix = v.pop("prefix", prefix)
-        topk = v.pop("topk")
-        apsp_method = v.pop("apsp_method")
+    method, prefix, topk, apsp_method = resolve_variant(
+        variant, method=method, prefix=prefix, topk=topk,
+        apsp_method=apsp_method)
 
     timings: Dict[str, float] = {}
     if S is None:
@@ -186,6 +220,7 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     else:
         arr, have_S = jnp.asarray(S, dtype=jnp.float32), True
     assert arr.ndim == 3, f"batched input must be 3-D, got {arr.shape}"
+    assert limit is None or limit >= 1, f"limit must be >= 1, got {limit}"
     B = arr.shape[0]
 
     # place the batch over the mesh's data axes when it divides them;
@@ -212,15 +247,25 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     S_host = np.asarray(S_b)
     tm_host = jax.device_get(tm_b)     # ONE transfer, not B x leaves
     results: List[ClusterResult] = []
-    for b in range(B):
+    B_out = B if limit is None else min(limit, B)
+    for b in range(B_out):
+        t_b = time.perf_counter()
         tm = jax.tree.map(lambda a, b=b: a[b], tm_host)
         res = dbht_mod.dbht(S_host[b], tm, apsp_method=apsp_method,
                             apsp_backend=backend)
         kk = k if k is not None else len(res.converging)
+        # per-result timings: the batched device stages amortize evenly
+        # over the B entries; the host-side DBHT walk is measured per b
+        per = {"similarity": timings["similarity"] / B,
+               "tmfg": timings["tmfg"] / B,
+               "dbht+apsp": time.perf_counter() - t_b}
+        per["total"] = sum(per.values())
         results.append(ClusterResult(
             labels=res.labels(kk), linkage=res.linkage, tmfg=tm, dbht=res,
-            edge_sum=float(tm.edge_sum), timings={}))
+            edge_sum=float(tm.edge_sum),
+            timings=per if collect_timings else {}))
     timings["dbht+apsp"] = time.perf_counter() - t0
+    timings["total"] = sum(timings.values())
 
     return BatchClusterResult(
         labels=np.stack([r.labels for r in results]), results=results,

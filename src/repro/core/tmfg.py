@@ -386,7 +386,9 @@ def build_tmfg(S: jax.Array, *, method: str = "lazy", prefix: int = 10,
     elif method == "corr":
         st = _build_corr(S, n)
     elif method == "orig":
-        st = _build_orig(S, n, prefix)
+        # a round can never insert more vertices than there are faces:
+        # clamp so small graphs accept large paper prefixes (par-200)
+        st = _build_orig(S, n, min(prefix, 2 * n - 4))
     else:
         raise ValueError(f"unknown method {method!r}")
 

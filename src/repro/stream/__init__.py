@@ -1,0 +1,17 @@
+"""Streaming rolling-window clustering service (DESIGN.md §10).
+
+The online counterpart of ``core/pipeline.py``: ticks arrive one (n,)
+observation at a time, the Pearson similarity of the rolling window is
+maintained incrementally in O(n²) per tick (``window``), concurrent
+clustering requests are micro-batched into bucketed ``cluster_batch``
+calls (``scheduler``), and results are cached by content hash with
+warm-start reuse across consecutive windows (``cache``).  ``service``
+ties the parts into the ``ClusterService`` façade.
+"""
+
+from . import cache, scheduler, service, window  # noqa: F401
+from .cache import ResultCache, WarmStart, content_key  # noqa: F401
+from .scheduler import ClusterRequest, MicroBatcher, bucket_size  # noqa: F401
+from .service import ClusterService  # noqa: F401
+from .window import (WindowState, materialize, window_delta,  # noqa: F401
+                     window_init, window_push, window_similarity)

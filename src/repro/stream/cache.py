@@ -1,0 +1,134 @@
+"""Result caching for the streaming service (DESIGN.md §10.3).
+
+Two independent mechanisms, composed by service.py:
+
+* :class:`ResultCache` — a content-hash LRU over finished
+  ``ClusterResult``s.  The key is a digest of the similarity matrix
+  bytes plus the full variant config, so identical windows (common when
+  ticks repeat or multiple subscribers ask for the same stream) are
+  answered without touching the pipeline.
+* :class:`WarmStart` — rolling-window reuse.  Consecutive windows differ
+  by one tick, so their similarity matrices are close; when the max
+  elementwise delta to the previously clustered window is below
+  ``reuse_threshold`` the previous result is returned as-is, and below
+  ``tmfg_threshold`` the previous TMFG topology is kept and only the
+  (cheap, host-side) DBHT stage reruns on the new similarities.  Both
+  thresholds default to 0.0 — exact streaming semantics unless the
+  caller opts into approximation.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+
+def content_key(S, config: Tuple) -> str:
+    """Digest of the similarity matrix bytes + the static variant config."""
+    h = hashlib.sha1()
+    arr = np.ascontiguousarray(np.asarray(S, dtype=np.float32))
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+    h.update(repr(config).encode())
+    return h.hexdigest()
+
+
+class ResultCache:
+    """Content-hash LRU over ClusterResults.  ``maxsize<=0`` disables."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._d: "OrderedDict[str, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: str):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def peek(self, key: str):
+        """``get`` without touching the hit/miss statistics — for the
+        scheduler's internal re-probe of requests the caller-facing path
+        already counted."""
+        if key in self._d:
+            self._d.move_to_end(key)
+            return self._d[key]
+        return None
+
+    def put(self, key: str, value) -> None:
+        if self.maxsize <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+
+class WarmStart:
+    """Previous-window reuse keyed on the similarity delta.
+
+    ``lookup(S)`` returns one of
+      ("reuse", prev_result)  — delta ≤ reuse_threshold: previous labels
+                                stand (the window barely moved);
+      ("tmfg",  prev_tmfg)    — delta ≤ tmfg_threshold: keep the TMFG /
+                                hub structure, rerun only DBHT on S;
+      (None,    None)         — recompute from scratch.
+    ``update(S, result)`` records the window that was actually clustered;
+    pass ``fresh_topology=False`` when the result reused an earlier
+    TMFG.
+
+    Drift anchoring: the reuse delta is measured against the last
+    *clustered* window, but the tmfg delta is measured against the
+    window the topology was actually *built* on — otherwise a slow
+    drift of per-step deltas below the threshold would chain
+    topology reuses forever while total divergence grows unbounded.
+    """
+
+    def __init__(self, reuse_threshold: float = 0.0,
+                 tmfg_threshold: float = 0.0):
+        assert reuse_threshold <= tmfg_threshold or tmfg_threshold == 0.0, \
+            "full reuse must be at least as strict as TMFG reuse"
+        self.reuse_threshold = reuse_threshold
+        self.tmfg_threshold = tmfg_threshold
+        self._S: Optional[np.ndarray] = None       # last clustered window
+        self._S_topo: Optional[np.ndarray] = None  # topology's source window
+        self._result = None
+        self.reuses = 0
+        self.tmfg_reuses = 0
+
+    @staticmethod
+    def _delta(S, base: Optional[np.ndarray]) -> float:
+        if base is None:
+            return float("inf")
+        return float(np.max(np.abs(np.asarray(S) - base)))
+
+    def delta(self, S) -> float:
+        return self._delta(S, self._S)
+
+    def lookup(self, S):
+        if self._result is None:
+            return None, None
+        if self._delta(S, self._S) <= self.reuse_threshold:
+            self.reuses += 1
+            return "reuse", self._result
+        if (self.tmfg_threshold > 0.0
+                and self._delta(S, self._S_topo) <= self.tmfg_threshold):
+            self.tmfg_reuses += 1
+            return "tmfg", self._result.tmfg
+        return None, None
+
+    def update(self, S, result, *, fresh_topology: bool = True) -> None:
+        self._S = np.asarray(S, dtype=np.float32).copy()
+        self._result = result
+        if fresh_topology:
+            self._S_topo = self._S

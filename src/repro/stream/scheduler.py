@@ -1,0 +1,197 @@
+"""Micro-batching request scheduler for clustering (DESIGN.md §10.2).
+
+The serving analogue of serve/engine.py's slot loop, specialized for the
+clustering pipeline: concurrent requests for TMFG-DBHT clustering are
+aggregated into *bucketed* ``cluster_batch`` calls instead of running
+one-by-one.
+
+Why bucketing matters: ``pipeline._batched_tmfg`` is an lru-cached jit
+keyed by the static config, and XLA re-specializes it per batch shape
+(B, n, n).  Padding every micro-batch up to the next bucket size
+(powers of two by default) bounds the number of distinct B values to
+log2(max_batch) — after warm-up every flush reuses a compiled program,
+which is the whole point of batching requests in the first place.  Pad
+entries repeat real matrices and their results are dropped on unpad.
+
+Requests are grouped by *compatibility key* — (n, k, method, prefix,
+topk, apsp_method, backend) — because only same-shaped, same-config
+matrices can share one vmapped program.  The batch axis is sharded over
+``mesh`` by ``cluster_batch`` itself (dist/sharding.py batch placement),
+and ``cluster_batch(limit=B)`` keeps the pad entries off the host-side
+DBHT walk — padding costs device FLOPs only.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import pipeline
+
+
+_UIDS = itertools.count()
+
+
+@dataclass(eq=False)        # identity semantics: the S field is an ndarray
+class ClusterRequest:
+    """One pending clustering request; filled in place at flush time."""
+
+    uid: int
+    S: np.ndarray                      # (n, n) similarity
+    k: Optional[int] = None
+    method: str = "lazy"
+    prefix: int = 10
+    topk: int = 64
+    apsp_method: str = "hub"
+    backend: str = "auto"
+    # filled by the scheduler
+    result: Optional[pipeline.ClusterResult] = None
+    done: bool = False
+    cached: bool = False               # answered from the result cache
+    ck: Optional[str] = None           # memoized content digest
+
+    @property
+    def key(self) -> Tuple:
+        """Compatibility key: requests sharing it batch together."""
+        return (self.S.shape[0], self.k, self.method, self.prefix,
+                self.topk, self.apsp_method, self.backend)
+
+    @property
+    def config(self) -> Tuple:
+        """Static config portion (content-cache key material)."""
+        return (self.k, self.method, self.prefix, self.topk,
+                self.apsp_method, self.backend)
+
+
+def bucket_size(b: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket ≥ b (the largest bucket caps a single flush)."""
+    for s in buckets:
+        if s >= b:
+            return s
+    return buckets[-1]
+
+
+class MicroBatcher:
+    """Aggregates submitted requests into bucketed ``cluster_batch`` calls.
+
+    ``submit()`` only enqueues; ``flush()`` does the work: group by
+    compatibility key, answer content-cache hits, pad each group to its
+    bucket, run one ``cluster_batch`` per bucket, unpad, fill results.
+    """
+
+    def __init__(self, *, max_batch: int = 8,
+                 buckets: Optional[Tuple[int, ...]] = None,
+                 mesh=None, cache=None):
+        if buckets is None:
+            # powers of two up to — and always including — max_batch, so
+            # a full flush of max_batch compatible requests is one batch
+            # even when max_batch itself is not a power of two
+            buckets = tuple(2 ** i for i in range(max_batch.bit_length())
+                            if 2 ** i < max_batch) + (max_batch,)
+        assert all(b > 0 for b in buckets)
+        self.buckets = tuple(sorted(set(buckets)))
+        self.max_batch = self.buckets[-1]
+        self.mesh = mesh
+        self.cache = cache                 # Optional[cache.ResultCache]
+        self.queue: List[ClusterRequest] = []
+        self.batches_run = 0
+        self.requests_run = 0
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def submit(self, S, *, k: Optional[int] = None,
+               variant: Optional[str] = None, **cfg) -> ClusterRequest:
+        """Enqueue one similarity matrix for clustering."""
+        if variant is not None:
+            # same precedence as cluster(): the named variant overrides
+            # the fields it defines, caller kwargs fill the rest — so the
+            # batched path resolves the exact config (and content-cache
+            # key) the single-matrix path would
+            defaults = {f: cfg[f] for f in
+                        ("method", "prefix", "topk", "apsp_method")
+                        if f in cfg}
+            (cfg["method"], cfg["prefix"], cfg["topk"],
+             cfg["apsp_method"]) = pipeline.resolve_variant(
+                 variant, **defaults)
+        req = ClusterRequest(uid=next(_UIDS),
+                             S=np.asarray(S, dtype=np.float32), k=k, **cfg)
+        self.queue.append(req)
+        return req
+
+    # -- flushing -----------------------------------------------------------
+    def _content_key(self, r: ClusterRequest) -> str:
+        """Content digest of a request, computed at most once: hashing an
+        (n, n) float32 matrix is megabytes of SHA-1 at production n, so
+        the digest is memoized on the request (the service pre-computes
+        it on its own cache probe and hands it down)."""
+        if r.ck is None:
+            from .cache import content_key
+            r.ck = content_key(r.S, r.config)
+        return r.ck
+
+    def _run_group(self, reqs: List[ClusterRequest]) -> None:
+        r0 = reqs[0]
+        for chunk_start in range(0, len(reqs), self.max_batch):
+            chunk = reqs[chunk_start:chunk_start + self.max_batch]
+            B = len(chunk)
+            pad_to = bucket_size(B, self.buckets)
+            stack = np.stack([r.S for r in chunk]
+                             + [chunk[-1].S] * (pad_to - B))
+            bres = pipeline.cluster_batch(
+                S=stack, k=r0.k, method=r0.method, prefix=r0.prefix,
+                topk=r0.topk, apsp_method=r0.apsp_method,
+                backend=r0.backend, mesh=self.mesh, limit=B)
+            self.batches_run += 1
+            self.requests_run += B
+            for r, res in zip(chunk, bres.results):   # pads drop here
+                r.result, r.done = res, True
+                if self.cache is not None:
+                    self.cache.put(self._content_key(r), res)
+
+    def flush(self) -> List[ClusterRequest]:
+        """Resolve every queued request; returns them in submit order.
+
+        Cache hits (and duplicate matrices submitted within one flush)
+        never reach the pipeline: only the first of each content key is
+        clustered; duplicates are resolved from their twin afterwards —
+        never through the LRU, which may have evicted the entry by then.
+        The cache re-probe uses ``peek`` so hit/miss statistics count
+        each request once (at the caller-facing ``submit``/``get``).
+
+        The queue is taken over up front: if a pipeline stage raises
+        mid-flush, the exception propagates with the queue already
+        cleared — unresolved requests stay ``done=False`` but are never
+        silently re-clustered (or double-resolved) by a later flush.
+        """
+        out, self.queue = self.queue, []
+        dedupe = self.cache is not None and self.cache.maxsize > 0
+        todo: List[ClusterRequest] = []
+        first: Dict[str, ClusterRequest] = {}
+        dups: List[ClusterRequest] = []
+        for r in out:
+            if dedupe:
+                ck = self._content_key(r)
+                hit = self.cache.peek(ck)
+                if hit is not None:
+                    r.result, r.done, r.cached = hit, True, True
+                    continue
+                if ck in first:
+                    dups.append(r)         # resolved from its twin below
+                    continue
+                first[ck] = r
+            todo.append(r)
+
+        groups: Dict[Tuple, List[ClusterRequest]] = {}
+        for r in todo:
+            groups.setdefault(r.key, []).append(r)
+        for reqs in groups.values():
+            self._run_group(reqs)
+
+        for r in dups:
+            twin = first[r.ck]
+            r.result, r.done, r.cached = twin.result, True, True
+        return out

@@ -1,0 +1,162 @@
+"""ClusterService — the streaming rolling-window façade (DESIGN.md §10.4).
+
+Ties the three streaming parts together around one rolling window:
+
+    svc = ClusterService(n=500, window=256, k=5, variant="opt")
+    for x in ticks:                 # x is one (n,) observation
+        svc.tick(x)                 # O(n²) co-moment update (§10.1)
+    req = svc.submit()              # enqueue clustering of current window
+    svc.drain()                     # micro-batched flush (§10.2)
+    req.result.labels               # == cluster() on the materialized window
+
+``tick`` only updates the incremental similarity state; clustering work
+happens on ``submit``/``drain`` (or automatically every
+``recluster_every`` ticks once the window has ``min_ticks``).  Results
+flow through the content-hash LRU and the warm-start delta check
+(§10.3) before any pipeline work is scheduled, and the micro-batcher
+aggregates whatever remains into bucketed ``cluster_batch`` calls.
+
+With the default thresholds (0.0) the service is *exact*: the labels it
+returns equal ``cluster()`` on the materialized window (pinned by
+tests/test_stream.py), because the only approximation knobs — warm
+reuse and TMFG reuse — are opt-in.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import pipeline
+from .cache import ResultCache, WarmStart, content_key
+from .scheduler import ClusterRequest, MicroBatcher
+from .window import WindowState, window_init, window_push, window_similarity
+
+
+class ClusterService:
+    """Streaming rolling-window clustering with micro-batching + caching."""
+
+    def __init__(self, n: int, window: int, *, k: Optional[int] = None,
+                 variant: str = "opt", backend: str = "auto", mesh=None,
+                 max_batch: int = 8, cache_size: int = 128,
+                 reuse_threshold: float = 0.0, tmfg_threshold: float = 0.0,
+                 recluster_every: int = 0, min_ticks: Optional[int] = None):
+        (self.method, self.prefix, self.topk,
+         self.apsp_method) = pipeline.resolve_variant(variant)
+        self.k = k
+        self.backend = backend
+
+        self.state: WindowState = window_init(n, window)
+        self.cache = ResultCache(cache_size)
+        self.warm = WarmStart(reuse_threshold, tmfg_threshold)
+        self.batcher = MicroBatcher(max_batch=max_batch, mesh=mesh,
+                                    cache=self.cache)
+        self.recluster_every = recluster_every
+        self.min_ticks = min_ticks if min_ticks is not None else window
+        self.ticks = 0
+        self.latest: Optional[pipeline.ClusterResult] = None
+        self._warm_k: Optional[int] = None
+        self.warm_hits = 0
+
+    # -- streaming ----------------------------------------------------------
+    def tick(self, x) -> Optional[ClusterRequest]:
+        """Ingest one (n,) observation; O(n²).  Auto-submits a recluster
+        of the current window every ``recluster_every`` ticks once
+        ``min_ticks`` observations have arrived (0 disables)."""
+        self.state = window_push(self.state, np.asarray(x, np.float32))
+        self.ticks += 1
+        # host-side fill tracking — reading state.count would sync the device
+        filled = min(self.ticks, self.state.capacity)
+        if (self.recluster_every > 0
+                and filled >= self.min_ticks
+                and self.ticks % self.recluster_every == 0):
+            return self.submit()
+        return None
+
+    def similarity(self) -> np.ndarray:
+        """Current window's (n, n) Pearson matrix from the co-moments."""
+        return np.asarray(window_similarity(self.state))
+
+    # -- request path -------------------------------------------------------
+    def submit(self, S=None, *, k: Optional[int] = None) -> ClusterRequest:
+        """Enqueue a clustering request (current window if ``S`` is None).
+
+        Warm-start and cache tiers may answer immediately (``req.done``);
+        otherwise the request waits for the next ``drain``.
+        """
+        S = self.similarity() if S is None else np.asarray(S, np.float32)
+        kk = self.k if k is None else k
+        cfg = dict(method=self.method, prefix=self.prefix, topk=self.topk,
+                   apsp_method=self.apsp_method, backend=self.backend)
+        # uid=-1 marks "answered without queueing"; req.config is the ONE
+        # key schema — the same tuple the batcher digests for its LRU and
+        # in-flush dedupe, so service- and batcher-written entries match
+        req = ClusterRequest(uid=-1, S=S, k=kk, **cfg)
+
+        tier, payload = self.warm.lookup(S)
+        if tier == "reuse":
+            res = payload
+            kk_eff = kk if kk is not None else len(payload.dbht.converging)
+            if kk_eff != self._warm_k:
+                # same window, different requested cut: re-cut the cached
+                # dendrogram instead of handing back the wrong k
+                res = pipeline.ClusterResult(
+                    labels=payload.labels_at(kk_eff), linkage=payload.linkage,
+                    tmfg=payload.tmfg, dbht=payload.dbht,
+                    edge_sum=payload.edge_sum,
+                    reused_tmfg=payload.reused_tmfg)
+            req.result, req.done, req.cached = res, True, True
+            self.warm_hits += 1
+            self.latest = res
+            return req
+        if tier == "tmfg":
+            res = pipeline.cluster(S=S, k=kk, reuse_tmfg=payload,
+                                   apsp_method=self.apsp_method,
+                                   backend=self.backend)
+            req.result, req.done = res, True
+            self.warm_hits += 1
+            # warm-tier results feed the LRU too: a repeated window must
+            # hit the cache even after the warm state has moved on
+            self.cache.put(content_key(S, req.config), res)
+            self._record(S, res, kk)
+            return req
+
+        ck = content_key(S, req.config)
+        hit = self.cache.get(ck)
+        if hit is not None:
+            req.result, req.done, req.cached = hit, True, True
+            self._record(S, hit, kk)
+            return req
+
+        req = self.batcher.submit(S, k=kk, **cfg)
+        req.ck = ck                        # digest already paid for above
+        return req
+
+    def drain(self) -> List[ClusterRequest]:
+        """Flush the micro-batcher; returns the resolved requests."""
+        done = self.batcher.flush()
+        for r in done:
+            if r.result is not None:
+                self._record(r.S, r.result, r.k)
+        return done
+
+    def recluster(self) -> pipeline.ClusterResult:
+        """Synchronous submit+drain of the current window."""
+        req = self.submit()
+        if not req.done:
+            self.drain()
+        return req.result
+
+    def _record(self, S, res, k: Optional[int]) -> None:
+        # drift anchoring follows the result itself: a topology carried
+        # over from an earlier window (reused_tmfg) must not re-anchor
+        # _S_topo — not even when the result arrives via the LRU, whose
+        # byte-identical hit may wrap a reused topology
+        self.warm.update(S, res,
+                         fresh_topology=not getattr(res, "reused_tmfg",
+                                                    False))
+        # effective cut of the recorded result: the reuse tier must re-cut
+        # when a later request asks for a different k
+        self._warm_k = k if k is not None else len(res.dbht.converging)
+        self.latest = res

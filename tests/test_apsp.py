@@ -49,6 +49,26 @@ def test_hub_upper_bound_and_accuracy():
     np.testing.assert_allclose(D, D.T, atol=1e-5)
 
 
+def test_hub_invariants_vs_exact_and_direct_edges():
+    """Satellite (ISSUE 2): structural invariants of apsp_hub — symmetric,
+    zero diagonal, pointwise ≥ apsp_exact (it is an upper bound on true
+    distances) and ≤ the direct edge lengths (one hop is always available
+    via the final elementwise min with W)."""
+    W, _ = _setup(110, seed=7)
+    D_hub = np.asarray(A.apsp_hub(W))
+    D_exact = np.asarray(A.apsp_exact(W))
+    Wnp = np.asarray(W)
+
+    np.testing.assert_allclose(D_hub, D_hub.T, atol=1e-5)
+    np.testing.assert_allclose(np.diag(D_hub), 0.0)
+    assert (D_hub - D_exact >= -1e-4).all(), \
+        "hub APSP must upper-bound the exact distances"
+    finite = np.isfinite(Wnp)
+    assert (D_hub[finite] <= Wnp[finite] + 1e-5).all(), \
+        "hub APSP must never exceed a direct edge"
+    assert np.isfinite(D_hub).all()      # TMFG is connected
+
+
 def test_hub_more_hubs_monotone():
     """More hubs can only tighten the estimate."""
     W, D_ref = _setup(80, seed=4)

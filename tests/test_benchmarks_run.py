@@ -1,0 +1,43 @@
+"""benchmarks/run.py driver contract: strict exit codes + JSON artifact.
+
+Satellite (ISSUE 2): section failures used to be swallowed with a
+print-and-continue and the process always exited 0 — CI could never go
+red on a broken benchmark.  ``--strict`` must surface failures as a
+nonzero exit, and ``--json`` must write every section's rows.
+"""
+
+import json
+
+import benchmarks.run as br
+
+
+def test_strict_failure_exits_nonzero(monkeypatch, capsys):
+    monkeypatch.setitem(br.SECTIONS, "boom",
+                        lambda scale: (_ for _ in ()).throw(RuntimeError("x")))
+    assert br.main(["--only", "boom", "--strict"]) == 1
+    assert "SECTION-FAILED" in capsys.readouterr().out
+
+
+def test_lenient_failure_still_exits_zero(monkeypatch):
+    monkeypatch.setitem(br.SECTIONS, "boom",
+                        lambda scale: (_ for _ in ()).throw(RuntimeError("x")))
+    assert br.main(["--only", "boom"]) == 0
+
+
+def test_unknown_section_rejected():
+    assert br.main(["--only", "nosuchsection"]) == 2
+
+
+def test_json_artifact_written(monkeypatch, tmp_path):
+    rows = [{"name": "x", "us_per_call": "1"}]
+    monkeypatch.setitem(br.SECTIONS, "ok", lambda scale: rows)
+    monkeypatch.setitem(br.SECTIONS, "boom",
+                        lambda scale: (_ for _ in ()).throw(RuntimeError("x")))
+    out = tmp_path / "bench.json"
+    assert br.main(["--only", "ok,boom", "--scale", "0.5",
+                    "--json", str(out), "--strict"]) == 1
+    data = json.loads(out.read_text())
+    assert data["scale"] == 0.5
+    assert data["sections"]["ok"] == rows
+    assert data["failed"] == ["boom"]
+    assert "RuntimeError" in data["sections"]["boom"]["error"]

@@ -64,8 +64,10 @@ def test_cluster_accepts_precomputed_similarity(data):
 def test_timings_collected(data):
     X, _ = data
     res = cluster(X, k=5, variant="opt", collect_timings=True)
-    assert set(res.timings) == {"similarity", "tmfg", "dbht+apsp"}
+    assert set(res.timings) == {"similarity", "tmfg", "dbht+apsp", "total"}
     assert all(t >= 0 for t in res.timings.values())
+    stages = sum(v for k, v in res.timings.items() if k != "total")
+    assert res.timings["total"] == pytest.approx(stages)
 
 
 def test_cluster_batch_matches_single_loop():
@@ -77,12 +79,22 @@ def test_cluster_batch_matches_single_loop():
     bres = cluster_batch(np.stack(Xs), k=4, variant="opt",
                          collect_timings=True)
     assert bres.labels.shape == (3, 60) and len(bres) == 3
-    assert set(bres.timings) == {"similarity", "tmfg", "dbht+apsp"}
+    assert set(bres.timings) == {"similarity", "tmfg", "dbht+apsp", "total"}
     for b, X in enumerate(Xs):
         single = cluster(X, k=4, variant="opt")
         np.testing.assert_array_equal(single.labels, bres.labels[b])
         np.testing.assert_array_equal(single.labels, bres[b].labels)
         assert bres[b].edge_sum == pytest.approx(single.edge_sum, rel=1e-6)
+        # per-result timings propagate (with a total) when collected
+        assert set(bres[b].timings) == {"similarity", "tmfg", "dbht+apsp",
+                                        "total"}
+        assert all(t >= 0 for t in bres[b].timings.values())
+    # uncollected timings stay empty
+    assert cluster_batch(np.stack(Xs), k=4, variant="opt")[0].timings == {}
+    # limit materializes a prefix; limit=0 is rejected up front
+    assert len(cluster_batch(np.stack(Xs), k=4, variant="opt", limit=2)) == 2
+    with pytest.raises(AssertionError, match="limit"):
+        cluster_batch(np.stack(Xs), k=4, variant="opt", limit=0)
 
 
 def test_cluster_batch_accepts_custom_mesh_axis_names():
@@ -97,6 +109,23 @@ def test_cluster_batch_accepts_custom_mesh_axis_names():
     bres = cluster_batch(X, k=3, variant="opt", mesh=mesh)
     single = cluster(X[0], k=3, variant="opt")
     np.testing.assert_array_equal(single.labels, bres.labels[0])
+
+
+def test_cluster_batch_variant_parity():
+    """Satellite (ISSUE 2): for EVERY named variant, entry b of
+    cluster_batch(S=stack) equals cluster(S=S_b, variant=...) — only the
+    default config was pinned before."""
+    from repro.core.pipeline import cluster_batch
+
+    Xs = [make_dataset(48, 40, 3, noise=0.7, seed=s)[0] for s in range(2)]
+    S = np.stack([np.corrcoef(x).astype(np.float32) for x in Xs])
+    for v in VARIANTS:
+        bres = cluster_batch(S=S, k=3, variant=v)
+        for b in range(S.shape[0]):
+            single = cluster(S=S[b], k=3, variant=v)
+            np.testing.assert_array_equal(
+                single.labels, bres.labels[b],
+                err_msg=f"variant {v!r} batch entry {b} diverged")
 
 
 def test_cluster_batch_precomputed_similarity():

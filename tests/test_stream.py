@@ -1,0 +1,455 @@
+"""repro.stream: incremental window, micro-batcher, caches, service.
+
+The load-bearing pin is ``test_service_matches_batch_pipeline`` —
+ISSUE 2's acceptance criterion: after W warm-up ticks plus T update
+ticks the streaming service's labels equal ``cluster()`` on the
+materialized window, with the incremental similarity within 1e-5 of the
+from-scratch ``ops.pearson``.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.pipeline import cluster
+from repro.data.timeseries import make_dataset
+from repro.kernels import ops
+from repro.stream import (ClusterService, MicroBatcher, ResultCache,
+                          WarmStart, bucket_size, content_key, materialize,
+                          window_delta, window_init, window_push,
+                          window_similarity)
+
+
+def _ticks(n, T, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(T, n)).astype(np.float32) \
+        + 2.0 * np.sin(np.arange(T) / 7.0)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# window.py — incremental co-moments
+# ---------------------------------------------------------------------------
+
+class TestWindow:
+    def test_similarity_matches_pearson_fill_wrap_longrun(self):
+        """≤1e-5 vs ops.pearson on the materialized window at every phase:
+        partial fill, exactly full, and after multiple eviction wraps."""
+        n, L = 48, 40
+        xs = _ticks(n, 3 * L + 5)
+        st = window_init(n, L)
+        checked = 0
+        for t, x in enumerate(xs):
+            st = window_push(st, x)
+            if t in (4, L - 1, L, L + 7, 2 * L, 3 * L + 4):
+                W = materialize(st)
+                assert W.shape == (n, min(t + 1, L))
+                ref = np.asarray(ops.pearson(jnp.asarray(W)))
+                inc = np.asarray(window_similarity(st))
+                np.testing.assert_allclose(inc, ref, atol=1e-5)
+                checked += 1
+        assert checked == 6
+
+    def test_materialize_arrival_order_and_eviction(self):
+        n, L = 3, 4
+        st = window_init(n, L)
+        for t in range(L + 2):                     # evicts ticks 0 and 1
+            st = window_push(st, np.full(n, float(t), np.float32))
+        W = materialize(st)
+        np.testing.assert_array_equal(W[0], [2.0, 3.0, 4.0, 5.0])
+        assert int(st.count) == L
+
+    def test_similarity_diag_and_range(self):
+        n, L = 16, 24
+        st = window_init(n, L)
+        for x in _ticks(n, L, seed=3):
+            st = window_push(st, x)
+        S = np.asarray(window_similarity(st))
+        np.testing.assert_allclose(np.diag(S), 1.0)
+        assert (S >= -1.0).all() and (S <= 1.0).all()
+        np.testing.assert_allclose(S, S.T, atol=1e-6)
+
+    def test_constant_series_matches_pearson(self):
+        """Regression: a window containing an exactly-constant series
+        (halted instrument) must still match ops.pearson — the reference
+        zeroes that row/column including the diagonal."""
+        n, L = 12, 20
+        xs = _ticks(n, L, seed=5)
+        xs[:, 3] = 7.0                             # series 3 never moves
+        xs[:, 9] = 0.0                             # series 9 is silent
+        st = window_init(n, L)
+        for x in xs:
+            st = window_push(st, x)
+        ref = np.asarray(ops.pearson(jnp.asarray(materialize(st))))
+        inc = np.asarray(window_similarity(st))
+        np.testing.assert_allclose(inc, ref, atol=1e-5)
+        assert inc[3, 3] == 0.0 and inc[9, 9] == 0.0
+
+    def test_high_mean_low_variance_precision(self):
+        """Regression: price-like series (level ≫ move size) must stay
+        within the 1e-5 contract — raw (unshifted) moments would lose
+        the variance to float32 cancellation (measured 3.8e-3 at
+        mean=100/std=0.5, all-zero output at mean=1000/std=0.1)."""
+        n, L = 24, 64
+        rng = np.random.default_rng(6)
+        for level, std in ((100.0, 0.5), (1000.0, 0.1)):
+            base = rng.normal(size=(L + 16, n)).astype(np.float32)
+            xs = (level + std * base).astype(np.float32)
+            st = window_init(n, L)
+            for x in xs:                           # fill + wrap
+                st = window_push(st, x)
+            ref = np.asarray(ops.pearson(jnp.asarray(materialize(st))))
+            inc = np.asarray(window_similarity(st))
+            np.testing.assert_allclose(inc, ref, atol=1e-5,
+                                       err_msg=f"level={level} std={std}")
+            assert np.abs(inc).max() > 0.0         # not zeroed as degenerate
+
+    def test_level_drift_reanchors(self):
+        """Regression: series whose level random-walks far from the first
+        tick must stay within 1e-5 — the ring-pass re-anchor keeps the
+        shift origin near the current level (first-tick-only anchoring
+        measured 4.9e-3 after a 100→300 drift)."""
+        n, L = 16, 64
+        rng = np.random.default_rng(9)
+        st = window_init(n, L)
+        level = np.full(n, 100.0, np.float32)
+        for t in range(20 * L):                    # 20 ring passes
+            level = level + rng.normal(0.3, 0.5, n).astype(np.float32)
+            st = window_push(st, level + rng.normal(0, 1, n).astype(np.float32))
+        assert float(np.mean(np.asarray(st.ref))) > 400.0   # drifted far
+        ref = np.asarray(ops.pearson(jnp.asarray(materialize(st))))
+        inc = np.asarray(window_similarity(st))
+        np.testing.assert_allclose(inc, ref, atol=1e-5)
+
+    def test_window_delta(self):
+        n, L = 8, 16
+        st = window_init(n, L)
+        for x in _ticks(n, L, seed=4):
+            st = window_push(st, x)
+        S0 = window_similarity(st)
+        assert window_delta(st, S0) == pytest.approx(0.0, abs=1e-7)
+        st2 = window_push(st, 10 * np.ones(n, np.float32))
+        assert window_delta(st2, S0) > 0.01
+
+
+# ---------------------------------------------------------------------------
+# scheduler.py — micro-batching
+# ---------------------------------------------------------------------------
+
+def test_bucket_size():
+    buckets = (1, 2, 4, 8)
+    assert bucket_size(1, buckets) == 1
+    assert bucket_size(3, buckets) == 4
+    assert bucket_size(8, buckets) == 8
+    assert bucket_size(9, buckets) == 8      # largest bucket caps a flush
+
+
+class TestMicroBatcher:
+    @pytest.fixture(scope="class")
+    def mats(self):
+        Xs = [make_dataset(48, 40, 3, noise=0.7, seed=s)[0]
+              for s in range(3)]
+        return [np.corrcoef(X).astype(np.float32) for X in Xs]
+
+    def test_padded_batch_matches_single(self, mats):
+        """3 concurrent requests pad to bucket 4, run as ONE batch, and
+        each result equals the single-matrix pipeline."""
+        mb = MicroBatcher(max_batch=8)
+        reqs = [mb.submit(S, k=3, variant="opt") for S in mats]
+        assert len(mb) == 3 and not any(r.done for r in reqs)
+        out = mb.flush()
+        assert out == reqs and all(r.done for r in reqs)
+        assert mb.batches_run == 1 and mb.requests_run == 3
+        for r in reqs:
+            single = cluster(S=r.S, k=3, variant="opt")
+            np.testing.assert_array_equal(r.result.labels, single.labels)
+
+    def test_incompatible_configs_split_groups(self, mats):
+        mb = MicroBatcher(max_batch=8)
+        mb.submit(mats[0], k=3, variant="opt")
+        mb.submit(mats[1], k=3, variant="heap")   # different static config
+        mb.flush()
+        assert mb.batches_run == 2
+
+    def test_flush_dedupes_identical_content(self, mats):
+        mb = MicroBatcher(max_batch=8, cache=ResultCache(8))
+        r1 = mb.submit(mats[0], k=3, variant="opt")
+        r2 = mb.submit(mats[0], k=3, variant="opt")   # identical bytes
+        mb.flush()
+        assert mb.requests_run == 1                   # clustered once
+        assert r1.done and r2.done and r2.cached
+        np.testing.assert_array_equal(r1.result.labels, r2.result.labels)
+
+    def test_batcher_accepts_custom_mesh(self, mats):
+        """The batch axis placement flows through cluster_batch's mesh
+        machinery (dist/sharding.py), whatever the axis names."""
+        from repro.launch.mesh import make_mesh
+
+        mb = MicroBatcher(max_batch=4, mesh=make_mesh((1,), ("batch",)))
+        r = mb.submit(mats[0], k=3, variant="opt")
+        mb.flush()
+        single = cluster(S=mats[0], k=3, variant="opt")
+        np.testing.assert_array_equal(r.result.labels, single.labels)
+
+    def test_flush_failure_does_not_requeue_resolved_requests(self, mats,
+                                                              monkeypatch):
+        """Regression: a cluster_batch exception mid-flush must not leave
+        already-resolved requests queued for a silent re-run."""
+        from repro.core import pipeline as pl
+        from repro.stream import scheduler as sched
+
+        mb = MicroBatcher(max_batch=8)
+        ok = mb.submit(mats[0], k=3, variant="opt")
+        bad = mb.submit(mats[1], k=3, variant="heap")  # separate group
+        real = pl.cluster_batch
+        calls = {"n": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("injected")
+            return real(*a, **kw)
+
+        monkeypatch.setattr(sched.pipeline, "cluster_batch", flaky)
+        with pytest.raises(RuntimeError, match="injected"):
+            mb.flush()
+        assert ok.done and not bad.done
+        assert len(mb) == 0                    # nothing silently requeued
+        assert mb.flush() == []                # and nothing re-runs
+
+    def test_variant_overrides_explicit_kwargs_like_cluster(self, mats):
+        """Regression: submit(variant='opt', apsp_method='exact') must
+        resolve the same config as cluster() with the same arguments —
+        the named variant wins for the fields it defines."""
+        mb = MicroBatcher(max_batch=4)
+        r = mb.submit(mats[0], k=3, variant="opt", apsp_method="exact")
+        assert r.apsp_method == "hub"          # variant defines it
+        assert r.method == "lazy" and r.topk == 64
+
+    def test_cache_answers_second_flush(self, mats):
+        cache = ResultCache(8)
+        mb = MicroBatcher(max_batch=8, cache=cache)
+        mb.submit(mats[0], k=3, variant="opt")
+        mb.flush()
+        r = mb.submit(mats[0], k=3, variant="opt")
+        mb.flush()
+        assert r.cached and r.result is not None
+        assert mb.requests_run == 1
+
+    def test_dedupe_survives_lru_eviction_within_flush(self, mats):
+        """Regression: a duplicate must resolve from its twin request,
+        not the LRU — a 1-slot cache evicts the twin's entry before the
+        flush ends."""
+        mb = MicroBatcher(max_batch=8, cache=ResultCache(maxsize=1))
+        r1 = mb.submit(mats[0], k=3, variant="opt")
+        r2 = mb.submit(mats[0], k=3, variant="opt")   # duplicate
+        r3 = mb.submit(mats[1], k=3, variant="opt")   # evicts mats[0] entry
+        mb.flush()
+        assert mb.requests_run == 2
+        assert all(r.done and r.result is not None for r in (r1, r2, r3))
+        np.testing.assert_array_equal(r1.result.labels, r2.result.labels)
+
+    def test_non_power_of_two_max_batch_is_honored(self, mats):
+        """Regression: max_batch=3 must stay 3 (one flush of 3 compatible
+        requests = one batch), not silently round down to 2."""
+        mb = MicroBatcher(max_batch=3)
+        assert mb.max_batch == 3 and mb.buckets == (1, 2, 3)
+        for S in mats:
+            mb.submit(S, k=3, variant="opt")
+        mb.flush()
+        assert mb.batches_run == 1
+
+
+# ---------------------------------------------------------------------------
+# cache.py — LRU + warm start
+# ---------------------------------------------------------------------------
+
+class TestCaches:
+    def test_lru_eviction_order(self):
+        c = ResultCache(maxsize=2)
+        c.put("a", 1), c.put("b", 2)
+        assert c.get("a") == 1                    # refresh a
+        c.put("c", 3)                             # evicts b
+        assert c.get("b") is None and c.get("a") == 1 and c.get("c") == 3
+        assert len(c) == 2
+
+    def test_content_key_sensitive_to_data_and_config(self):
+        S = np.eye(4, dtype=np.float32)
+        k0 = content_key(S, ("opt",))
+        assert content_key(S + 1e-3, ("opt",)) != k0
+        assert content_key(S, ("heap",)) != k0
+        assert content_key(S.copy(), ("opt",)) == k0
+
+    def test_warm_start_tiers(self):
+        class Res:                                 # stand-in ClusterResult
+            tmfg = "TM"
+        ws = WarmStart(reuse_threshold=0.01, tmfg_threshold=0.1)
+        S = np.eye(4, dtype=np.float32)
+        assert ws.lookup(S) == (None, None)        # nothing recorded yet
+        ws.update(S, Res)
+        assert ws.lookup(S + 0.005) == ("reuse", Res)
+        assert ws.lookup(S + 0.05) == ("tmfg", "TM")
+        assert ws.lookup(S + 0.5) == (None, None)
+
+    def test_tmfg_delta_anchors_to_topology_source(self):
+        """Regression: the tmfg tier must bound TOTAL drift from the
+        window the topology was built on — per-step deltas below the
+        threshold must not chain reuses forever."""
+        class Res:
+            tmfg = "TM"
+        ws = WarmStart(reuse_threshold=0.0, tmfg_threshold=0.05)
+        S0 = np.zeros((4, 4), dtype=np.float32)
+        ws.update(S0, Res)                             # fresh topology at S0
+        assert ws.lookup(S0 + 0.04) == ("tmfg", "TM")
+        ws.update(S0 + 0.04, Res, fresh_topology=False)
+        # per-step delta 0.04 ≤ 0.05, but drift vs S0 is 0.08 > 0.05
+        assert ws.lookup(S0 + 0.08) == (None, None)
+
+    def test_warm_start_default_is_exact(self):
+        ws = WarmStart()                           # both thresholds 0.0
+        S = np.eye(4, dtype=np.float32)
+        ws.update(S, object())
+        assert ws.lookup(S + 1e-6) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# service.py — the streaming acceptance pin
+# ---------------------------------------------------------------------------
+
+class TestClusterService:
+    def test_service_matches_batch_pipeline(self):
+        """ISSUE 2 acceptance: W warm-up + T update ticks, then the
+        service's labels equal cluster() on the materialized window and
+        the incremental similarity is within 1e-5 of ops.pearson."""
+        n, W, T = 80, 64, 16
+        X, _ = make_dataset(n, W + T, 4, noise=0.7, seed=3)
+        svc = ClusterService(n=n, window=W, k=4, variant="opt")
+        for t in range(W + T):
+            svc.tick(X[:, t])
+        res = svc.recluster()
+
+        win = materialize(svc.state)
+        np.testing.assert_array_equal(win, X[:, T:W + T])
+        ref_S = np.asarray(ops.pearson(jnp.asarray(win)))
+        np.testing.assert_allclose(svc.similarity(), ref_S, atol=1e-5)
+        ref = cluster(win, k=4, variant="opt")
+        np.testing.assert_array_equal(res.labels, ref.labels)
+
+    def test_auto_recluster_and_drain(self):
+        n, W = 32, 16
+        X, _ = make_dataset(n, W + 8, 3, noise=0.7, seed=5)
+        svc = ClusterService(n=n, window=W, k=3, recluster_every=4)
+        submitted = 0
+        for t in range(W + 8):
+            if svc.tick(X[:, t]) is not None:
+                submitted += 1
+        assert submitted == 3                      # ticks W, W+4, W+8
+        done = svc.drain()
+        assert all(r.done for r in done)
+        assert svc.latest is not None
+
+    def test_warm_reuse_skips_recompute(self):
+        n, W = 32, 16
+        X, _ = make_dataset(n, W + 4, 3, noise=0.7, seed=6)
+        svc = ClusterService(n=n, window=W, k=3, reuse_threshold=2.0)
+        for t in range(W):
+            svc.tick(X[:, t])
+        first = svc.recluster()
+        svc.tick(X[:, W])
+        again = svc.recluster()
+        assert again is first                      # returned as-is
+        assert svc.warm_hits == 1
+
+    def test_lru_hit_after_warm_miss(self):
+        """Regression: window A clustered, window B clustered (warm state
+        now B), then A submitted again — the warm tier misses but the LRU
+        must answer without crashing, and A becomes the warm window."""
+        n, W = 32, 16
+        XA, _ = make_dataset(n, W, 3, noise=0.7, seed=14)
+        XB = XA[::-1].copy()                       # very different window
+        svc = ClusterService(n=n, window=W, k=3)
+        ra = svc.submit(S=np.corrcoef(XA)); svc.drain()
+        svc.submit(S=np.corrcoef(XB)); svc.drain()
+        again = svc.submit(S=np.corrcoef(XA))      # warm=B: miss -> LRU hit
+        assert again.done and again.cached
+        assert again.result is ra.result
+        assert svc.cache.hits == 1
+
+    def test_warm_reuse_recuts_for_different_k(self):
+        """Regression: the reuse tier must honor a per-request k — the
+        cached result was cut at k=3, asking for k=5 must re-cut the
+        dendrogram, not hand back 3 clusters."""
+        n, W = 48, 24
+        X, _ = make_dataset(n, W, 5, noise=0.7, seed=8)
+        svc = ClusterService(n=n, window=W, k=3, reuse_threshold=2.0)
+        for t in range(W):
+            svc.tick(X[:, t])
+        first = svc.recluster()
+        assert len(np.unique(first.labels)) == 3
+        req = svc.submit(k=5)                      # warm window, new cut
+        assert req.done and svc.warm_hits == 1
+        assert len(np.unique(req.result.labels)) == 5
+        np.testing.assert_array_equal(req.result.labels, first.labels_at(5))
+
+    def test_tmfg_warm_tier_reruns_dbht_only(self):
+        n, W = 48, 24
+        X, _ = make_dataset(n, W + 2, 3, noise=0.7, seed=7)
+        svc = ClusterService(n=n, window=W, k=3,
+                             reuse_threshold=0.0, tmfg_threshold=2.0)
+        for t in range(W):
+            svc.tick(X[:, t])
+        S_first = svc.similarity()
+        first = svc.recluster()
+        svc.tick(X[:, W])
+        S_warm = svc.similarity()
+        warm = svc.recluster()
+        assert warm is not first and svc.warm_hits == 1
+        assert warm.tmfg is first.tmfg             # topology reused
+        assert warm.labels.shape == (n,)
+        # warm-tier results land in the LRU: the same window resubmitted
+        # after the warm state moves on must be a cache hit, not a rerun
+        ck = content_key(S_warm, (3, svc.method, svc.prefix, svc.topk,
+                                  svc.apsp_method, svc.backend))
+        assert svc.cache.peek(ck) is warm
+        # the result is marked as carrying a reused topology, so recording
+        # it (now, or later via an LRU hit of the same bytes) advances the
+        # reuse baseline but NOT the topology drift anchor
+        assert warm.reused_tmfg and not first.reused_tmfg
+        np.testing.assert_array_equal(svc.warm._S, S_warm)
+        np.testing.assert_array_equal(svc.warm._S_topo, S_first)
+
+    def test_requests_compare_by_identity(self):
+        """Regression: two uid=-1 requests must not raise on == (the S
+        field is an ndarray; dataclass tuple-eq would be ambiguous)."""
+        S = np.eye(4, dtype=np.float32)
+        from repro.stream import ClusterRequest
+        a = ClusterRequest(uid=-1, S=S, k=3)
+        b = ClusterRequest(uid=-1, S=S, k=3)
+        assert a != b and a == a
+        assert a in [a, b] and b not in [a]
+
+
+# ---------------------------------------------------------------------------
+# pipeline wiring — moments / reuse_tmfg kwargs
+# ---------------------------------------------------------------------------
+
+def test_cluster_accepts_moments():
+    n, L = 48, 40
+    X, _ = make_dataset(n, L, 3, noise=0.7, seed=8)
+    st = window_init(n, L)
+    for t in range(L):
+        st = window_push(st, X[:, t])
+    res = cluster(moments=st, k=3, variant="opt", collect_timings=True)
+    ref = cluster(X, k=3, variant="opt")
+    np.testing.assert_array_equal(res.labels, ref.labels)
+    assert "total" in res.timings
+
+
+def test_cluster_reuse_tmfg_skips_build():
+    from conftest import clustered_similarity
+
+    S, _, _ = clustered_similarity(48, seed=9)
+    full = cluster(S=S, k=3, variant="opt")
+    warm = cluster(S=S, k=3, variant="opt", reuse_tmfg=full.tmfg)
+    assert warm.tmfg is full.tmfg
+    np.testing.assert_array_equal(warm.labels, full.labels)
