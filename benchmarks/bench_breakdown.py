@@ -1,10 +1,48 @@
 """Paper fig. 5: runtime breakdown by pipeline stage (similarity /
-TMFG construction / APSP+DBHT) on the Crop stand-in, per variant."""
+TMFG construction / APSP+DBHT) on the Crop stand-in, per variant —
+plus the DBHT placement acceptance row: one batched ``cluster_batch``
+timed with the host-side per-matrix DBHT walk against the batched
+device implementation (DESIGN.md §11.4).
+"""
 
 from __future__ import annotations
 
-from repro.core.pipeline import cluster
+import numpy as np
+
+from repro.core.pipeline import cluster, cluster_batch
+from repro.data.timeseries import make_dataset
 from .common import emit, load_bench_datasets
+
+
+def _dbht_batch_row(scale: float):
+    """Host-vs-device DBHT on one batch (B>=8, n scaled from 200).
+
+    Both paths share the batched similarity+TMFG device stages, so the
+    row times the *DBHT stage alone* (the batch's ``dbht+apsp`` timing)
+    — the per-matrix host walk against the single vmapped device
+    program — not the whole pipeline, whose shared stages would dilute
+    the ratio.
+    """
+    B, n, L = 8, max(24, int(round(200 * scale))), 48
+    Xs = [make_dataset(n, L, 4, noise=0.7, seed=s)[0] for s in range(B)]
+    X = np.stack(Xs)
+
+    def dbht_stage(impl: str) -> float:
+        return cluster_batch(X, k=4, variant="opt", dbht_impl=impl,
+                             collect_timings=True).timings["dbht+apsp"]
+
+    t_host = t_device = float("inf")
+    for rep in range(3):                      # rep 0 warms the jits
+        th, td = dbht_stage("host"), dbht_stage("device")
+        if rep:
+            t_host, t_device = min(t_host, th), min(t_device, td)
+    return dict(
+        name=f"fig5/dbht-batch/B{B}-n{n}",
+        us_per_call=f"{t_device * 1e6:.0f}",
+        derived=f"host_over_device={t_host / t_device:.2f}x",
+        t_dbht_host=f"{t_host:.3f}",
+        t_dbht_device=f"{t_device:.3f}",
+    )
 
 
 def run(scale: float = 1.0, variants=("par-10", "corr", "heap", "opt")):
@@ -22,8 +60,10 @@ def run(scale: float = 1.0, variants=("par-10", "corr", "heap", "opt")):
             t_tmfg=f"{t['tmfg']:.3f}",
             t_dbht_apsp=f"{t['dbht+apsp']:.3f}",
         ))
+    rows.append(_dbht_batch_row(scale))
     return emit(rows, ["name", "us_per_call", "derived", "t_similarity",
-                       "t_tmfg", "t_dbht_apsp"])
+                       "t_tmfg", "t_dbht_apsp", "t_dbht_host",
+                       "t_dbht_device"])
 
 
 if __name__ == "__main__":

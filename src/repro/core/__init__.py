@@ -5,6 +5,7 @@ linkage -- all as composable JAX modules.  See DESIGN.md.
 Public API (function names chosen not to shadow submodules):
   build_tmfg            -- jit'd TMFG construction (orig / corr / lazy)
   run_dbht              -- DBHT clustering on a TMFG     (module: .dbht)
+  run_dbht_batch        -- batched device DBHT (DESIGN.md §11)
   apsp_exact / apsp_hub -- all-pairs shortest paths      (module: .apsp)
   complete_linkage      -- vectorized HAC                (module: .hac)
   cluster               -- end-to-end pipeline (OPT-TDBHT by default)
@@ -15,7 +16,8 @@ Public API (function names chosen not to shadow submodules):
 from . import apsp, ari, dbht, hac, pipeline, tmfg  # noqa: F401
 from .apsp import apsp_exact, apsp_hub, edge_lengths  # noqa: F401
 from .ari import ari as adjusted_rand_index  # noqa: F401
-from .dbht import DBHTResult, dbht as run_dbht  # noqa: F401
+from .dbht import (DBHTResult, dbht as run_dbht,  # noqa: F401
+                   dbht_batch as run_dbht_batch)
 from .hac import complete_linkage, cut_linkage  # noqa: F401
 from .pipeline import (BatchClusterResult, ClusterResult,  # noqa: F401
                        VARIANTS, cluster, cluster_batch)

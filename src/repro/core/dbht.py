@@ -1,16 +1,20 @@
 """DBHT — Directed Bubble Hierarchy Tree clustering on a TMFG.
 
 Implements the DBHT method (Song et al. 2012) as described by the paper's
-§2, split the way the paper splits it:
+§2, with BOTH halves of the stage expressible on device (DESIGN.md §11):
 
-  * O(n) *tree logic* (bubble tree, edge directions, converging bubbles,
-    flow assignment) runs on the host in numpy — this is the part the paper
-    notes is cheap and leaves serial;
-  * the *heavy* stages — APSP over the TMFG and complete-linkage HAC — run
-    on device in JAX (see apsp.py / hac.py), exactly the stages the paper
-    parallelizes.
+  * ``impl="device"`` (production default) — the whole stage (bubble-tree
+    ancestry, edge directions, converging-bubble flow, fine assignment,
+    APSP and the nested HAC) is one jitted, vmappable JAX program; a
+    batch of matrices finishes DBHT under a single ``vmap`` with one
+    device→host transfer (:func:`dbht_batch`).  The recursive host walks
+    are replaced by fixed-point pointer jumping (DESIGN.md §11.2).
+  * ``impl="host"`` — the original per-matrix numpy tree walk, kept as
+    the reference oracle; device and host are label- and
+    linkage-identical (the §11.4 parity contract, pinned by
+    tests/test_dbht_device.py).
 
-Pipeline:
+Pipeline (both impls compute exactly these steps):
   1. bubble tree: node per 4-clique (from the TMFG insertion log), edge per
      shared separating triangle — a tree with n-3 nodes.
   2. edge directions: the tree edge between bubbles (c, p) with separating
@@ -31,15 +35,20 @@ Pipeline:
 
 from __future__ import annotations
 
+import functools
+import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
+from jax import lax
 
 import repro.core.apsp as apsp_mod
 import repro.core.hac as hac_mod
+import repro.core.tmfg as tmfg_mod
 
 
 @dataclass
@@ -57,7 +66,7 @@ class DBHTResult:
 
 
 # ---------------------------------------------------------------------------
-# host-side tree logic
+# host-side tree logic (the reference oracle — DESIGN.md §11.4)
 # ---------------------------------------------------------------------------
 
 def _euler_tour(parent: np.ndarray):
@@ -159,13 +168,8 @@ def _flow_to_converging(bubble_parent, direction, strength=None):
     return dest, converging
 
 
-# ---------------------------------------------------------------------------
-# main entry
-# ---------------------------------------------------------------------------
-
-def dbht(S, tmfg, *, apsp_method: str = "hub", apsp_backend: str = "auto",
-         precomputed_apsp: Optional[np.ndarray] = None) -> DBHTResult:
-    """Run DBHT on a TMFG (accepts JAX or numpy TMFGResult fields)."""
+def _dbht_host(S, tmfg, *, apsp_method, apsp_backend, precomputed_apsp):
+    """The original per-matrix numpy walk (reference oracle)."""
     S = np.asarray(S, dtype=np.float64)
     n = S.shape[0]
     edges = np.asarray(tmfg.edges)
@@ -209,3 +213,213 @@ def dbht(S, tmfg, *, apsp_method: str = "hub", apsp_backend: str = "auto",
     return DBHTResult(linkage=Z, cluster_of=cluster_of, bubble_of=bubble_of,
                       converging=converging, direction=direction[1:],
                       apsp=D)
+
+
+# ---------------------------------------------------------------------------
+# device-side tree logic (DESIGN.md §11) — jit/vmap-traceable throughout
+# ---------------------------------------------------------------------------
+
+def _anc_matrix(bubble_parent: jax.Array) -> jax.Array:
+    """Ancestor-or-self indicator of the bubble tree by pointer doubling.
+
+    ``anc[b, a]`` is True iff a lies on the path b → root (including
+    b itself).  The parent pointers are squared ⌈log2 B⌉+1 times; each
+    step ORs in the ancestor set reachable through the current jump
+    pointer, so subtree membership — the Euler-tour interval test of the
+    host oracle — becomes one gathered row lookup (DESIGN.md §11.1).
+    """
+    B = bubble_parent.shape[0]
+    ptr = jnp.where(bubble_parent < 0, jnp.arange(B, dtype=jnp.int32),
+                    bubble_parent.astype(jnp.int32))
+    anc = jnp.eye(B, dtype=bool)
+    steps = int(math.ceil(math.log2(max(B, 2)))) + 1
+
+    def body(_, carry):
+        anc, ptr = carry
+        return anc | anc[ptr], ptr[ptr]
+
+    anc, _ = lax.fori_loop(0, steps, body, (anc, ptr))
+    return anc
+
+
+def _device_directions(S: jax.Array, edges: jax.Array, bubble_tri: jax.Array,
+                       home_bubble: jax.Array, anc: jax.Array) -> jax.Array:
+    """Edge directions for all B-1 tree edges in one (B, n) reduction.
+
+    Side strength of edge b = sum of TMFG edge weights from the
+    separating triangle's corners into each side; a vertex u is on the
+    child side iff b is an ancestor-or-self of u's home bubble
+    (DESIGN.md §11.1).  Returns (B,) int32 with [0] fixed to 0 (unused).
+    """
+    n = S.shape[0]
+    A_w = tmfg_mod.tmfg_adjacency(n, edges, S)            # (n, n), 0 off-graph
+    tri = bubble_tri                                       # (B, 3)
+    rows = A_w[tri[:, 0]] + A_w[tri[:, 1]] + A_w[tri[:, 2]]   # (B, n)
+    cols = jnp.arange(n)
+    in_tri = ((cols[None, :] == tri[:, 0:1])
+              | (cols[None, :] == tri[:, 1:2])
+              | (cols[None, :] == tri[:, 2:3]))            # (B, n)
+    member = anc[home_bubble].T                            # (B, n)
+    w = jnp.where(in_tri, 0.0, rows)
+    s_child = jnp.sum(jnp.where(member, w, 0.0), axis=1)
+    s_parent = jnp.sum(jnp.where(member, 0.0, w), axis=1)
+    direction = jnp.where(s_child >= s_parent, 1, -1).astype(jnp.int32)
+    return direction.at[0].set(0)
+
+
+def _device_flow(bubble_parent: jax.Array, direction: jax.Array):
+    """Flow-to-converging by fixed-point pointer jumping (DESIGN.md §11.2).
+
+    Each bubble's single outgoing successor mirrors the host walk's
+    ``out_edges[cur][0]``: the parent when this bubble's own edge points
+    up (its key — the edge id — is smaller than any child edge's), else
+    the lowest-id child edge pointing down, else itself (converging).
+    Squaring the successor map ⌈log2 B⌉+1 times reaches the converging
+    fixed points without any recursion.  Returns (nxt, dest, conv_mask).
+    """
+    B = bubble_parent.shape[0]
+    ar = jnp.arange(B, dtype=jnp.int32)
+    parent = bubble_parent.astype(jnp.int32)
+    safe_parent = jnp.where(ar >= 1, parent, 0)
+    child_key = jnp.where((ar >= 1) & (direction == 1), ar, B)
+    first_child = jnp.full((B,), B, jnp.int32).at[safe_parent].min(
+        child_key.astype(jnp.int32))
+    to_parent = (ar >= 1) & (direction == -1)
+    nxt = jnp.where(to_parent, safe_parent,
+                    jnp.where(first_child < B, first_child, ar))
+
+    steps = int(math.ceil(math.log2(max(B, 2)))) + 1
+    dest = lax.fori_loop(0, steps, lambda _, d: d[d], nxt)
+    conv_mask = nxt == ar
+    return nxt, dest, conv_mask
+
+
+def _device_assign(D: jax.Array, bubble_verts: jax.Array,
+                   home_bubble: jax.Array, dest: jax.Array,
+                   conv_mask: jax.Array):
+    """Coarse clusters + fine bubble re-assignment on device.
+
+    Converging bubbles are numbered in ascending bubble id (matching the
+    host oracle's enumeration); the fine stage picks, per vertex, the
+    basin bubble with minimal mean APSP distance to its 4 defining
+    vertices — one masked (n, B) argmin (DESIGN.md §11.1).
+    """
+    conv_id = jnp.cumsum(conv_mask.astype(jnp.int32)) - 1
+    bubble_cluster = conv_id[dest]                         # (B,)
+    cluster_of = bubble_cluster[home_bubble]               # (n,)
+
+    bv = bubble_verts                                      # (B, 4)
+    # mean over the 4 defining vertices, summed in the oracle's
+    # (sequential) association so host and device round identically
+    md = (((D[:, bv[:, 0]] + D[:, bv[:, 1]]) + D[:, bv[:, 2]])
+          + D[:, bv[:, 3]]) / 4.0                          # (n, B)
+    same = bubble_cluster[None, :] == cluster_of[:, None]
+    bubble_of = jnp.argmin(jnp.where(same, md, jnp.inf), axis=1)
+    return cluster_of, bubble_of.astype(jnp.int32), bubble_cluster
+
+
+def _dbht_device_core(S, edges, bubble_parent, bubble_tri, bubble_verts,
+                      home_bubble, D, *, backend: str = "auto"):
+    """Traceable single-matrix device DBHT: TMFG arrays + APSP → outputs.
+
+    Everything is fixed-shape, so the whole stage jit-compiles and vmaps
+    over a batch axis (DESIGN.md §11).  ``conv_mask`` stands in for the
+    variable-length converging-id list until the (single) host transfer.
+    """
+    anc = _anc_matrix(bubble_parent)
+    direction = _device_directions(S, edges, bubble_tri, home_bubble, anc)
+    _, dest, conv_mask = _device_flow(bubble_parent, direction)
+    cluster_of, bubble_of, _ = _device_assign(
+        D, bubble_verts, home_bubble, dest, conv_mask)
+    adj = hac_mod.hierarchical_offsets(D, bubble_of, cluster_of)
+    Z = hac_mod.complete_linkage(adj, backend=backend)
+    return dict(direction=direction, conv_mask=conv_mask,
+                cluster_of=cluster_of, bubble_of=bubble_of, D=D, Z=Z)
+
+
+@functools.lru_cache(maxsize=None)
+def _device_dbht_jit(apsp_method: str, backend: str, precomputed: bool,
+                     batched: bool):
+    """Cached jitted (optionally vmapped) device DBHT program per static
+    config, so repeated calls reuse one compiled executable per shape."""
+
+    def with_apsp(S, edges, bp, bt, bv, hb):
+        W = apsp_mod.edge_lengths(S.shape[0], edges, S)
+        D = apsp_mod.apsp(W, method=apsp_method, backend=backend)
+        return _dbht_device_core(S, edges, bp, bt, bv, hb, D,
+                                 backend=backend)
+
+    def with_D(S, edges, bp, bt, bv, hb, D):
+        return _dbht_device_core(S, edges, bp, bt, bv, hb, D,
+                                 backend=backend)
+
+    f = with_D if precomputed else with_apsp
+    return jax.jit(jax.vmap(f) if batched else f)
+
+
+def _result_from_device(out, b=None) -> DBHTResult:
+    """DBHTResult from (host copies of) the device-core output dict."""
+    pick = (lambda a: a) if b is None else (lambda a: a[b])
+    conv = np.flatnonzero(pick(out["conv_mask"])).astype(np.int64)
+    return DBHTResult(
+        linkage=pick(out["Z"]), cluster_of=pick(out["cluster_of"]),
+        bubble_of=pick(out["bubble_of"]), converging=conv,
+        direction=pick(out["direction"])[1:], apsp=pick(out["D"]))
+
+
+def _tmfg_args(tmfg):
+    return (jnp.asarray(tmfg.edges), jnp.asarray(tmfg.bubble_parent),
+            jnp.asarray(tmfg.bubble_tri), jnp.asarray(tmfg.bubble_verts),
+            jnp.asarray(tmfg.home_bubble))
+
+
+def dbht_batch(S, tmfg, *, apsp_method: str = "hub", backend: str = "auto",
+               limit: Optional[int] = None) -> List[DBHTResult]:
+    """Batched device DBHT: (B, n, n) similarities + batched TMFG arrays.
+
+    The whole batch — APSP, tree directions, flow, fine assignment, HAC —
+    runs as ONE vmapped jitted program followed by a single device→host
+    transfer; no per-matrix host work happens until the final (cheap)
+    result unpacking (DESIGN.md §11.4).  ``limit`` slices the transfer:
+    pad entries of a bucketed micro-batch pay device FLOPs only.
+    """
+    S_b = jnp.asarray(S, jnp.float32)
+    B = S_b.shape[0]
+    B_out = B if limit is None else min(limit, B)
+    fn = _device_dbht_jit(apsp_method, backend, False, True)
+    out = fn(S_b, *_tmfg_args(tmfg))
+    out = jax.device_get({k: v[:B_out] for k, v in out.items()})
+    return [_result_from_device(out, b) for b in range(B_out)]
+
+
+# ---------------------------------------------------------------------------
+# main entry
+# ---------------------------------------------------------------------------
+
+def dbht(S, tmfg, *, apsp_method: str = "hub", apsp_backend: str = "auto",
+         precomputed_apsp: Optional[np.ndarray] = None,
+         impl: str = "device") -> DBHTResult:
+    """Run DBHT on a TMFG (accepts JAX or numpy TMFGResult fields).
+
+    ``impl`` selects the execution strategy (DESIGN.md §11.4):
+    ``"device"`` (default) runs the entire stage as one jitted JAX
+    program with a single device→host transfer; ``"host"`` is the numpy
+    reference walk.  Both return identical labels, linkage, converging
+    set and assignments on the same inputs (the parity contract).
+    """
+    if impl == "host":
+        return _dbht_host(S, tmfg, apsp_method=apsp_method,
+                          apsp_backend=apsp_backend,
+                          precomputed_apsp=precomputed_apsp)
+    if impl != "device":
+        raise ValueError(f"unknown DBHT impl {impl!r}")
+
+    S_j = jnp.asarray(S, jnp.float32)
+    if precomputed_apsp is not None:
+        fn = _device_dbht_jit(apsp_method, apsp_backend, True, False)
+        out = fn(S_j, *_tmfg_args(tmfg),
+                 jnp.asarray(precomputed_apsp, jnp.float32))
+    else:
+        fn = _device_dbht_jit(apsp_method, apsp_backend, False, False)
+        out = fn(S_j, *_tmfg_args(tmfg))
+    return _result_from_device(jax.device_get(out))

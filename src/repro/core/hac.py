@@ -19,16 +19,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 INF = jnp.inf
 
 
-@functools.partial(jax.jit, static_argnames=())
-def complete_linkage(D: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("backend",))
+def complete_linkage(D: jax.Array, *, backend: str = "jnp") -> jax.Array:
     """Complete-linkage HAC on a dense distance matrix.
 
     Returns a scipy-style linkage matrix (n-1, 4): (left id, right id,
     height, size); leaf ids < n, merge k creates id n+k.  Tie-breaking is
     lowest-flat-index, matching the numpy oracle in tmfg_ref.py.
+
+    ``backend`` picks the per-merge min scan (DESIGN.md §11.3): the
+    default ``"jnp"`` is the reference flat argmin; any other value
+    routes the scan through ``kernels.ops.masked_argmax`` — the same
+    gain-scan Pallas kernel the TMFG uses — as a per-row (max, argmax)
+    of -D with dead columns masked, then an argmax over alive rows.
+    Both formulations compare identical values with identical low-index
+    tie-breaking, so the linkage is bitwise the same on every backend.
     """
     n = D.shape[0]
     D = D.astype(jnp.float32)
@@ -41,11 +51,18 @@ def complete_linkage(D: jax.Array) -> jax.Array:
 
     def body(k, carry):
         D, ids, sizes, alive, Z = carry
-        big = jnp.where(alive[:, None] & alive[None, :], D, INF)
-        flat = jnp.argmin(big)
-        i, j = flat // n, flat % n
+        if backend == "jnp":
+            big = jnp.where(alive[:, None] & alive[None, :], D, INF)
+            flat = jnp.argmin(big)
+            i, j = flat // n, flat % n
+            h = big[i, j]
+        else:
+            vals, idx = ops.masked_argmax(-D, ~alive, backend=backend)
+            vals = jnp.where(alive, vals, -INF)
+            i = jnp.argmax(vals)
+            j = idx[i].astype(i.dtype)
+            h = -vals[i]
         i, j = jnp.minimum(i, j), jnp.maximum(i, j)
-        h = big[i, j]
         Z = Z.at[k].set(jnp.stack([ids[i].astype(jnp.float32),
                                    ids[j].astype(jnp.float32), h,
                                    (sizes[i] + sizes[j]).astype(jnp.float32)]))

@@ -12,10 +12,13 @@ Every stage is switchable to reproduce the paper's other variants:
 
 ``cluster_batch()`` is the throughput entry point (DESIGN.md §7.4): a
 batch of B datasets/similarity matrices is clustered data-parallel — the
-device-heavy stages (similarity + TMFG construction) run vmapped with
-the batch axis sharded over the mesh from dist/sharding.py, and the
-host-side DBHT tree logic follows per matrix.  On one device it degrades
-to the vmapped single-device program, bitwise identical to a loop of
+device-heavy stages (similarity, TMFG construction, and — with the
+default ``dbht_impl="device"`` — the entire DBHT stage including APSP
+and the nested HAC) run vmapped with the batch axis sharded over the
+mesh from dist/sharding.py; a single device→host transfer returns the
+batch's labels/linkage (DESIGN.md §11.4).  ``dbht_impl="host"`` restores
+the per-matrix numpy walk as the reference path.  On one device it
+degrades to the vmapped single-device program, identical to a loop of
 ``cluster()`` calls (pinned by tests/test_pipeline.py).
 """
 
@@ -87,10 +90,16 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             method: str = "lazy", prefix: int = 10, topk: int = 64,
             apsp_method: str = "hub", backend: str = "auto",
             variant: Optional[str] = None, reuse_tmfg=None,
+            dbht_impl: str = "device",
             collect_timings: bool = False) -> ClusterResult:
     """Cluster time series X (n, L) — or a precomputed similarity S — with
     TMFG-DBHT.  ``k`` cuts the dendrogram into k flat clusters (defaults to
     the number of converging bubbles).
+
+    ``dbht_impl`` selects the DBHT execution strategy (DESIGN.md §11.4):
+    ``"device"`` (default) runs the whole stage as one jitted JAX
+    program; ``"host"`` is the numpy reference walk.  Labels and linkage
+    are identical either way (the parity contract).
 
     Streaming hooks (DESIGN.md §10): ``moments`` takes a
     ``repro.stream.window.WindowState`` and derives S from the rolling
@@ -125,8 +134,8 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    res = dbht_mod.dbht(np.asarray(S), tm, apsp_method=apsp_method,
-                        apsp_backend=backend)
+    res = dbht_mod.dbht(S, tm, apsp_method=apsp_method,
+                        apsp_backend=backend, impl=dbht_impl)
     timings["dbht+apsp"] = time.perf_counter() - t0
     timings["total"] = sum(timings.values())
 
@@ -190,21 +199,27 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
                   method: str = "lazy", prefix: int = 10, topk: int = 64,
                   apsp_method: str = "hub", backend: str = "auto",
                   variant: Optional[str] = None, mesh=None,
-                  limit: Optional[int] = None,
+                  limit: Optional[int] = None, dbht_impl: str = "device",
                   collect_timings: bool = False) -> BatchClusterResult:
     """Cluster a batch of datasets X (B, n, L) — or precomputed similarity
     matrices S (B, n, n) — data-parallel across devices.
 
-    The similarity and TMFG-construction stages run as ONE vmapped jit'd
-    program with the batch axis sharded over ``mesh`` (defaults to a 1-D
-    mesh over all local devices when B divides the device count; falls
-    back to single-device execution otherwise, so CPU CI takes the same
-    code path).  The host-side DBHT stage then walks each matrix.
+    With the default ``dbht_impl="device"`` EVERY pipeline stage runs
+    batched on device: similarity and TMFG construction as one vmapped
+    jit'd program with the batch axis sharded over ``mesh`` (defaults to
+    a 1-D mesh over all local devices when B divides the device count;
+    falls back to single-device execution otherwise, so CPU CI takes the
+    same code path), then the whole DBHT stage — APSP, bubble-tree
+    directions, pointer-jumping flow, fine assignment and the nested
+    HAC — under one further vmap with a single device→host transfer of
+    the batch's outputs (DESIGN.md §11.4).  ``dbht_impl="host"`` restores
+    the per-matrix numpy reference walk.
 
     ``limit`` materializes host-side results only for the first ``limit``
     entries: the stream scheduler (DESIGN.md §10.2) pads batches up to a
     bucket size so the jitted device program is reused, and the pad
-    entries must not pay the per-matrix DBHT walk.
+    entries must not pay host-side DBHT work (on the device path they
+    cost device FLOPs only — their outputs are never transferred).
 
     Returns a :class:`BatchClusterResult`; entry ``b`` is identical to
     ``cluster(X[b], ...)``.
@@ -244,21 +259,37 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    S_host = np.asarray(S_b)
-    tm_host = jax.device_get(tm_b)     # ONE transfer, not B x leaves
-    results: List[ClusterResult] = []
     B_out = B if limit is None else min(limit, B)
+    if dbht_impl == "device":
+        # the whole DBHT stage for the batch is ONE vmapped jitted
+        # program plus one device→host transfer (DESIGN.md §11.4)
+        dbs = dbht_mod.dbht_batch(S_b, tm_b, apsp_method=apsp_method,
+                                  backend=backend, limit=B_out)
+        t_dbht = time.perf_counter() - t0
+    else:
+        dbs, t_dbht = None, 0.0
+        S_host = np.asarray(S_b[:B_out])
+    # ONE transfer, not B x leaves — sliced to B_out first so pad
+    # entries of a bucketed micro-batch never cross the boundary
+    tm_host = jax.device_get(jax.tree.map(lambda a: a[:B_out], tm_b))
+    results: List[ClusterResult] = []
     for b in range(B_out):
         t_b = time.perf_counter()
         tm = jax.tree.map(lambda a, b=b: a[b], tm_host)
-        res = dbht_mod.dbht(S_host[b], tm, apsp_method=apsp_method,
-                            apsp_backend=backend)
+        if dbs is not None:
+            res = dbs[b]
+        else:
+            res = dbht_mod.dbht(S_host[b], tm, apsp_method=apsp_method,
+                                apsp_backend=backend, impl="host")
         kk = k if k is not None else len(res.converging)
-        # per-result timings: the batched device stages amortize evenly
-        # over the B entries; the host-side DBHT walk is measured per b
+        # per-result timings: the batched device stages (and the batched
+        # device DBHT) amortize evenly over the B entries; the host-side
+        # DBHT walk, when selected, is measured per b
         per = {"similarity": timings["similarity"] / B,
                "tmfg": timings["tmfg"] / B,
-               "dbht+apsp": time.perf_counter() - t_b}
+               "dbht+apsp": (t_dbht / B + (time.perf_counter() - t_b)
+                             if dbs is not None
+                             else time.perf_counter() - t_b)}
         per["total"] = sum(per.values())
         results.append(ClusterResult(
             labels=res.labels(kk), linkage=res.linkage, tmfg=tm, dbht=res,

@@ -14,11 +14,14 @@ which is the whole point of batching requests in the first place.  Pad
 entries repeat real matrices and their results are dropped on unpad.
 
 Requests are grouped by *compatibility key* — (n, k, method, prefix,
-topk, apsp_method, backend) — because only same-shaped, same-config
-matrices can share one vmapped program.  The batch axis is sharded over
-``mesh`` by ``cluster_batch`` itself (dist/sharding.py batch placement),
-and ``cluster_batch(limit=B)`` keeps the pad entries off the host-side
-DBHT walk — padding costs device FLOPs only.
+topk, apsp_method, backend, dbht_impl) — because only same-shaped,
+same-config matrices can share one vmapped program.  The batch axis is
+sharded over ``mesh`` by ``cluster_batch`` itself (dist/sharding.py
+batch placement).  With the default ``dbht_impl="device"`` a flushed
+bucket completes the ENTIRE pipeline — similarity, TMFG, APSP, DBHT
+tree logic and HAC — on device (DESIGN.md §11.4), and
+``cluster_batch(limit=B)`` keeps the pad entries' outputs off the
+device→host transfer — padding costs device FLOPs only.
 """
 
 from __future__ import annotations
@@ -47,6 +50,7 @@ class ClusterRequest:
     topk: int = 64
     apsp_method: str = "hub"
     backend: str = "auto"
+    dbht_impl: str = "device"
     # filled by the scheduler
     result: Optional[pipeline.ClusterResult] = None
     done: bool = False
@@ -57,11 +61,18 @@ class ClusterRequest:
     def key(self) -> Tuple:
         """Compatibility key: requests sharing it batch together."""
         return (self.S.shape[0], self.k, self.method, self.prefix,
-                self.topk, self.apsp_method, self.backend)
+                self.topk, self.apsp_method, self.backend, self.dbht_impl)
 
     @property
     def config(self) -> Tuple:
-        """Static config portion (content-cache key material)."""
+        """Static config portion (content-cache key material).
+
+        ``dbht_impl`` is deliberately absent: it selects an execution
+        strategy, not semantics — the §11.4 parity contract makes device
+        and host results identical (up to the adversarial float32
+        near-tie caveat stated there), so cached results are shared
+        across impls (it DOES participate in ``key``, because one
+        ``cluster_batch`` call runs a single impl)."""
         return (self.k, self.method, self.prefix, self.topk,
                 self.apsp_method, self.backend)
 
@@ -144,7 +155,8 @@ class MicroBatcher:
             bres = pipeline.cluster_batch(
                 S=stack, k=r0.k, method=r0.method, prefix=r0.prefix,
                 topk=r0.topk, apsp_method=r0.apsp_method,
-                backend=r0.backend, mesh=self.mesh, limit=B)
+                backend=r0.backend, dbht_impl=r0.dbht_impl,
+                mesh=self.mesh, limit=B)
             self.batches_run += 1
             self.requests_run += B
             for r, res in zip(chunk, bres.results):   # pads drop here

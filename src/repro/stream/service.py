@@ -41,11 +41,13 @@ class ClusterService:
                  variant: str = "opt", backend: str = "auto", mesh=None,
                  max_batch: int = 8, cache_size: int = 128,
                  reuse_threshold: float = 0.0, tmfg_threshold: float = 0.0,
-                 recluster_every: int = 0, min_ticks: Optional[int] = None):
+                 recluster_every: int = 0, min_ticks: Optional[int] = None,
+                 dbht_impl: str = "device"):
         (self.method, self.prefix, self.topk,
          self.apsp_method) = pipeline.resolve_variant(variant)
         self.k = k
         self.backend = backend
+        self.dbht_impl = dbht_impl
 
         self.state: WindowState = window_init(n, window)
         self.cache = ResultCache(cache_size)
@@ -88,7 +90,8 @@ class ClusterService:
         S = self.similarity() if S is None else np.asarray(S, np.float32)
         kk = self.k if k is None else k
         cfg = dict(method=self.method, prefix=self.prefix, topk=self.topk,
-                   apsp_method=self.apsp_method, backend=self.backend)
+                   apsp_method=self.apsp_method, backend=self.backend,
+                   dbht_impl=self.dbht_impl)
         # uid=-1 marks "answered without queueing"; req.config is the ONE
         # key schema — the same tuple the batcher digests for its LRU and
         # in-flush dedupe, so service- and batcher-written entries match
@@ -113,7 +116,8 @@ class ClusterService:
         if tier == "tmfg":
             res = pipeline.cluster(S=S, k=kk, reuse_tmfg=payload,
                                    apsp_method=self.apsp_method,
-                                   backend=self.backend)
+                                   backend=self.backend,
+                                   dbht_impl=self.dbht_impl)
             req.result, req.done = res, True
             self.warm_hits += 1
             # warm-tier results feed the LRU too: a repeated window must

@@ -1,0 +1,154 @@
+"""Device-vs-host DBHT parity: the DESIGN.md §11.4 contract as tests.
+
+``dbht(impl="device")`` — the jitted pointer-jumping implementation —
+must be label-, linkage-, converging-, and assignment-identical to the
+numpy reference walk (``impl="host"``) on every variant config, across
+batches via ``cluster_batch``, and on the degenerate small-n graphs
+(the PR 2 prefix-clamp regime where B is 1..5 bubbles).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import clustered_similarity
+import repro.core.dbht as D
+from repro.core.pipeline import cluster, cluster_batch, VARIANTS, \
+    resolve_variant
+from repro.core.tmfg import build_tmfg
+from repro.data.timeseries import make_dataset
+
+
+def _assert_dbht_equal(rh: D.DBHTResult, rd: D.DBHTResult, msg=""):
+    np.testing.assert_array_equal(rh.direction, rd.direction, err_msg=msg)
+    np.testing.assert_array_equal(rh.converging, rd.converging, err_msg=msg)
+    np.testing.assert_array_equal(rh.cluster_of, rd.cluster_of, err_msg=msg)
+    np.testing.assert_array_equal(rh.bubble_of, rd.bubble_of, err_msg=msg)
+    np.testing.assert_array_equal(rh.apsp, rd.apsp, err_msg=msg)
+    np.testing.assert_array_equal(rh.linkage, rd.linkage, err_msg=msg)
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_device_matches_host_all_variants(variant):
+    """§11.4: every variant config — exact and hub APSP, all three TMFG
+    construction methods — is bitwise identical across impls."""
+    S, _, _ = clustered_similarity(64, k=4, seed=5)
+    method, prefix, topk, apsp_method = resolve_variant(variant)
+    tm = build_tmfg(jnp.asarray(S, jnp.float32), method=method,
+                    prefix=prefix, topk=topk)
+    rh = D.dbht(S, tm, apsp_method=apsp_method, impl="host")
+    rd = D.dbht(S, tm, apsp_method=apsp_method, impl="device")
+    _assert_dbht_equal(rh, rd, msg=variant)
+    for k in (2, 4, 7):
+        np.testing.assert_array_equal(rh.labels(k), rd.labels(k),
+                                      err_msg=f"{variant} k={k}")
+
+
+def test_device_flow_matches_host_walk():
+    """§11.2: the pointer-jumping successor map reproduces the host
+    walk's first-out-edge semantics on random tree/direction inputs."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        B = int(rng.integers(1, 40))
+        parent = np.full(B, -1, np.int64)
+        for b in range(1, B):
+            parent[b] = rng.integers(0, b)          # parents precede kids
+        direction = np.concatenate(
+            [[0], rng.choice([-1, 1], size=max(B - 1, 0))]).astype(np.int64)
+        dest_h, conv_h = D._flow_to_converging(parent, direction)
+        _, dest_d, conv_mask = D._device_flow(
+            jnp.asarray(parent), jnp.asarray(direction, jnp.int32))
+        np.testing.assert_array_equal(dest_h, np.asarray(dest_d),
+                                      err_msg=f"trial {trial}")
+        np.testing.assert_array_equal(conv_h, np.flatnonzero(conv_mask),
+                                      err_msg=f"trial {trial}")
+
+
+def test_ancestor_matrix_matches_euler_tour():
+    """§11.1: pointer-doubling ancestry equals the Euler-tour interval
+    test the host oracle uses for subtree membership."""
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        B = int(rng.integers(2, 50))
+        parent = np.full(B, -1, np.int64)
+        for b in range(1, B):
+            parent[b] = rng.integers(0, b)
+        tin, tout = D._euler_tour(parent)
+        anc = np.asarray(D._anc_matrix(jnp.asarray(parent)))
+        for b in range(B):
+            in_subtree = (tin >= tin[b]) & (tin < tout[b])  # c in subtree(b)
+            np.testing.assert_array_equal(anc[:, b], in_subtree)
+
+
+@pytest.mark.parametrize("variant", ["par-200", "opt", "corr"])
+@pytest.mark.parametrize("n", [5, 6, 8])
+def test_device_matches_host_degenerate_small_n(n, variant):
+    """The PR 2 prefix-fix regime: graphs with 1-5 bubbles, prefix far
+    larger than the face count.  Both impls must agree exactly."""
+    X, _ = make_dataset(n, 24, 2, noise=0.7, seed=n)
+    rh = cluster(X, variant=variant, dbht_impl="host")
+    rd = cluster(X, variant=variant, dbht_impl="device")
+    np.testing.assert_array_equal(rh.labels, rd.labels)
+    _assert_dbht_equal(rh.dbht, rd.dbht, msg=f"n={n} {variant}")
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_cluster_batch_device_dbht_parity(variant):
+    """§11.4 across the batch: every entry of a device-DBHT
+    cluster_batch equals the host-impl single-matrix pipeline."""
+    Xs = [make_dataset(48, 40, 3, noise=0.7, seed=s)[0] for s in range(3)]
+    S = np.stack([np.corrcoef(x).astype(np.float32) for x in Xs])
+    bres = cluster_batch(S=S, k=3, variant=variant, dbht_impl="device")
+    for b in range(S.shape[0]):
+        single = cluster(S=S[b], k=3, variant=variant, dbht_impl="host")
+        np.testing.assert_array_equal(
+            single.labels, bres.labels[b],
+            err_msg=f"variant {variant!r} batch entry {b}")
+        np.testing.assert_array_equal(single.linkage, bres[b].linkage)
+        _assert_dbht_equal(single.dbht, bres[b].dbht,
+                           msg=f"{variant} entry {b}")
+
+
+def test_cluster_batch_degenerate_small_n_batch():
+    """Batched device DBHT on the smallest legal graphs (n=5: B=2
+    bubbles, one tree edge) — including the limit/pad path."""
+    Xs = [make_dataset(5, 24, 2, noise=0.7, seed=s)[0] for s in range(4)]
+    X = np.stack(Xs)
+    bres = cluster_batch(X, variant="par-200", dbht_impl="device", limit=3)
+    assert len(bres) == 3
+    for b in range(3):
+        single = cluster(Xs[b], variant="par-200", dbht_impl="host")
+        np.testing.assert_array_equal(single.labels, bres[b].labels)
+
+
+def test_device_precomputed_apsp():
+    S, _, _ = clustered_similarity(48, k=3, seed=9)
+    tm = build_tmfg(jnp.asarray(S, jnp.float32), method="lazy", topk=64)
+    rh = D.dbht(S, tm, apsp_method="exact", impl="host")
+    rd = D.dbht(S, tm, precomputed_apsp=rh.apsp, impl="device")
+    _assert_dbht_equal(rh, rd)
+
+
+def test_dbht_batch_single_transfer_entry_points():
+    """dbht_batch is the batched device entry point: list of DBHTResult
+    with host-typed fields, honoring limit."""
+    Xs = [make_dataset(40, 32, 3, noise=0.7, seed=s)[0] for s in range(2)]
+    S = np.stack([np.corrcoef(x).astype(np.float32) for x in Xs])
+    from repro.core.pipeline import _batched_tmfg
+    tms = _batched_tmfg("lazy", 10, 64)(jnp.asarray(S, jnp.float32))
+    outs = D.dbht_batch(S, tms, apsp_method="hub", limit=1)
+    assert len(outs) == 1
+    assert isinstance(outs[0].converging, np.ndarray)
+    assert outs[0].linkage.shape == (39, 4)
+    import jax
+    tm0 = jax.tree.map(lambda a: a[0], jax.device_get(tms))
+    rh = D.dbht(S[0], tm0, apsp_method="hub", impl="host")
+    _assert_dbht_equal(rh, outs[0])
+
+
+def test_unknown_impl_rejected():
+    S, _, _ = clustered_similarity(24, k=2, seed=2)
+    tm = build_tmfg(jnp.asarray(S, jnp.float32))
+    with pytest.raises(ValueError, match="impl"):
+        D.dbht(S, tm, impl="gpu")

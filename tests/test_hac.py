@@ -32,6 +32,17 @@ def test_linkage_matches_oracle(n):
     assert (Z[:, 3] == Z_ref[:, 3]).all()
 
 
+@pytest.mark.parametrize("backend", ["auto", "interpret"])
+def test_linkage_backend_parity(backend):
+    """DESIGN.md §11.3: the masked_argmax-based min-merge scan (the
+    gain-scan kernel reuse) is bitwise identical to the flat-argmin
+    reference formulation on every backend."""
+    D = _rand_dist(32, 5)
+    Z_ref = np.asarray(hac.complete_linkage(jnp.asarray(D)))
+    Z = np.asarray(hac.complete_linkage(jnp.asarray(D), backend=backend))
+    assert (Z == Z_ref).all()
+
+
 def test_linkage_heights_monotone():
     D = _rand_dist(50, 7)
     Z = np.asarray(hac.complete_linkage(jnp.asarray(D)))

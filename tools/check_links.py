@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Link-check every Markdown file in the repo (no network needed).
+
+Verifies that each relative `[text](target)` link in `*.md` points at a
+file or directory that exists (anchors `#...` are stripped; absolute
+`http(s)://` and `mailto:` links are skipped — CI must not depend on
+external availability).  Exits nonzero listing every broken link.
+
+Run from anywhere:  python tools/check_links.py [root]
+Also imported by tests/test_docs.py so the same rule is a tier-1 test.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def broken_links(root: Path) -> list:
+    """[(md file, target), ...] for every relative link that dangles."""
+    bad = []
+    for md in sorted(root.rglob("*.md")):
+        if any(part.startswith(".") for part in md.relative_to(root).parts):
+            continue  # .git, .github READMEs etc. are not repo docs
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                bad.append((str(md.relative_to(root)), target))
+    return bad
+
+
+def main(argv=None) -> int:
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parent.parent
+    bad = broken_links(root)
+    for md, target in bad:
+        print(f"BROKEN {md}: ({target})")
+    print(f"# checked *.md under {root}: {len(bad)} broken link(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
