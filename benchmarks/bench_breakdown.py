@@ -28,7 +28,10 @@ def _dbht_batch_row(scale: float):
     X = np.stack(Xs)
 
     def dbht_stage(impl: str) -> float:
+        # fused=False: per-stage timings only exist on the staged path
+        # (DESIGN.md §12.4); the fused program reports total only
         return cluster_batch(X, k=4, variant="opt", dbht_impl=impl,
+                             fused=False,
                              collect_timings=True).timings["dbht+apsp"]
 
     t_host = t_device = float("inf")
@@ -49,7 +52,8 @@ def run(scale: float = 1.0, variants=("par-10", "corr", "heap", "opt")):
     ds = [d for d in load_bench_datasets(scale) if d["name"] == "Crop"][0]
     rows = []
     for v in variants:
-        res = cluster(ds["X"], k=ds["k"], variant=v, collect_timings=True)
+        res = cluster(ds["X"], k=ds["k"], variant=v, fused=False,
+                      collect_timings=True)
         t = res.timings
         total = t["total"]
         rows.append(dict(

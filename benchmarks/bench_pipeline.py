@@ -1,0 +1,56 @@
+"""Fused vs staged end-to-end pipeline latency (DESIGN.md §12.4).
+
+The one-jit fused path (``run_pipeline_device`` behind
+``cluster(..., fused=True)``) exists to cut per-request latency: the
+staged path pays three dispatch+sync round-trips (similarity → TMFG →
+DBHT) where the fused path pays one dispatch and one transfer.  This
+section times both plans end to end — one matrix and a B=8 batch — and
+reports the staged/fused ratio; the acceptance bar is fused ≤ staged on
+the batched row (the serving shape the stream scheduler flushes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.config import PipelineConfig
+from repro.core.pipeline import cluster, cluster_batch
+from repro.data.timeseries import make_dataset
+from .common import emit, timeit
+
+
+def _row(name: str, t_fused: float, t_staged: float) -> dict:
+    return dict(
+        name=name,
+        us_per_call=f"{t_fused * 1e6:.0f}",
+        derived=f"staged_over_fused={t_staged / t_fused:.2f}x",
+        t_fused=f"{t_fused:.4f}",
+        t_staged=f"{t_staged:.4f}",
+    )
+
+
+def run(scale: float = 1.0):
+    n, L, B = max(24, int(round(200 * scale))), 48, 8
+    cfg = PipelineConfig.opt()
+    X = make_dataset(n, L, 4, noise=0.7, seed=0)[0]
+    Xb = np.stack([make_dataset(n, L, 4, noise=0.7, seed=s)[0]
+                   for s in range(B)])
+
+    rows = [
+        _row(f"pipeline/single/n{n}",
+             timeit(lambda: cluster(X, k=4, config=cfg, fused=True),
+                    repeats=3, warmup=1),
+             timeit(lambda: cluster(X, k=4, config=cfg, fused=False),
+                    repeats=3, warmup=1)),
+        _row(f"pipeline/batch/B{B}-n{n}",
+             timeit(lambda: cluster_batch(Xb, k=4, config=cfg, fused=True),
+                    repeats=3, warmup=1),
+             timeit(lambda: cluster_batch(Xb, k=4, config=cfg, fused=False),
+                    repeats=3, warmup=1)),
+    ]
+    return emit(rows, ["name", "us_per_call", "derived",
+                       "t_fused", "t_staged"])
+
+
+if __name__ == "__main__":
+    run()

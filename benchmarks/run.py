@@ -12,6 +12,7 @@ columns).  Sections:
   fig7  edge-sum reduction             (bench_edgesum)
   apsp  exact vs hub APSP              (bench_apsp)
   stream  streaming window + service   (bench_stream)
+  pipeline  fused vs staged latency    (bench_pipeline)
   roofline  dry-run roofline table     (roofline; needs results/dryrun)
 
 ``--strict`` turns section failures into a nonzero exit code (CI);
@@ -27,7 +28,8 @@ import sys
 import time
 
 from . import (bench_apsp, bench_ari, bench_breakdown, bench_edgesum,
-               bench_speedup, bench_stream, bench_tmfg, roofline)
+               bench_pipeline, bench_speedup, bench_stream, bench_tmfg,
+               roofline)
 
 SECTIONS = {
     "fig2": lambda scale: bench_tmfg.run(scale),
@@ -37,6 +39,7 @@ SECTIONS = {
     "fig7": lambda scale: bench_edgesum.run(scale),
     "apsp": lambda scale: bench_apsp.run(scale),
     "stream": lambda scale: bench_stream.run(scale),
+    "pipeline": lambda scale: bench_pipeline.run(scale),
     "roofline": lambda scale: roofline.run(),
 }
 

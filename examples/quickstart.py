@@ -5,22 +5,33 @@
 
 import numpy as np
 
+from repro.core import PipelineConfig, cluster
 from repro.core.ari import ari
-from repro.core.pipeline import cluster
 from repro.data.timeseries import make_dataset
 
 # 300 series, 5 latent classes
 X, labels = make_dataset(n=300, L=96, k=5, noise=0.7, seed=0)
 
-# the paper's full pipeline: Pearson similarity -> lazy (heap-equivalent)
-# TMFG with an up-front top-K candidate table -> hub-approximate APSP ->
-# DBHT dendrogram, cut at k=5
-result = cluster(X, k=5, variant="opt", collect_timings=True)
+# one frozen config object carries every stage knob (DESIGN.md §12.1);
+# opt() is the paper's OPT-TDBHT: Pearson similarity -> lazy
+# (heap-equivalent) TMFG with an up-front top-K candidate table ->
+# hub-approximate APSP -> DBHT dendrogram
+cfg = PipelineConfig.opt()
+
+# fused by default: the whole pipeline is ONE jitted device program +
+# one device→host transfer (DESIGN.md §12.2); timings report total only
+result = cluster(X, k=5, config=cfg, collect_timings=True)
 
 print(f"clusters found: {len(np.unique(result.labels))}")
 print(f"ARI vs ground truth: {ari(labels, result.labels):.3f}")
 print(f"TMFG edge sum: {result.edge_sum:.1f}")
-print("stage timings:", {k: f"{v:.3f}s" for k, v in result.timings.items()})
+print(f"fused end-to-end: {result.timings['total']:.3f}s")
+
+# the staged path (fused=False) is the timing/debug mode: identical
+# labels and linkage, per-stage timings (DESIGN.md §12.4)
+staged = cluster(X, k=5, config=cfg, fused=False, collect_timings=True)
+assert (staged.labels == result.labels).all()
+print("stage timings:", {k: f"{v:.3f}s" for k, v in staged.timings.items()})
 
 # the dendrogram is a scipy-style linkage matrix: cut it anywhere
 for k in (2, 5, 10):

@@ -3,6 +3,7 @@ and DBHT hierarchical clustering, plus hub-approximate APSP and complete
 linkage -- all as composable JAX modules.  See DESIGN.md.
 
 Public API (function names chosen not to shadow submodules):
+  PipelineConfig        -- frozen, hashable stage config (module: .config)
   build_tmfg            -- jit'd TMFG construction (orig / corr / lazy)
   run_dbht              -- DBHT clustering on a TMFG     (module: .dbht)
   run_dbht_batch        -- batched device DBHT (DESIGN.md §11)
@@ -10,17 +11,21 @@ Public API (function names chosen not to shadow submodules):
   complete_linkage      -- vectorized HAC                (module: .hac)
   cluster               -- end-to-end pipeline (OPT-TDBHT by default)
   cluster_batch         -- batched, data-parallel pipeline (DESIGN.md §7.4)
+  run_pipeline_device   -- the fused one-jit pipeline (DESIGN.md §12.2)
+  clear_compiled        -- drop cached executables (module: .jitcache)
   adjusted_rand_index   -- ARI metric                    (module: .ari)
 """
 
-from . import apsp, ari, dbht, hac, pipeline, tmfg  # noqa: F401
+from . import apsp, ari, config, dbht, hac, jitcache, pipeline, tmfg  # noqa: F401,E501
 from .apsp import apsp_exact, apsp_hub, edge_lengths  # noqa: F401
 from .ari import ari as adjusted_rand_index  # noqa: F401
+from .config import PipelineConfig  # noqa: F401
 from .dbht import (DBHTResult, dbht as run_dbht,  # noqa: F401
                    dbht_batch as run_dbht_batch)
 from .hac import complete_linkage, cut_linkage  # noqa: F401
 from .pipeline import (BatchClusterResult, ClusterResult,  # noqa: F401
-                       VARIANTS, cluster, cluster_batch)
+                       DeviceOutputs, VARIANTS, clear_compiled, cluster,
+                       cluster_batch, run_pipeline_device)
 from .tmfg import TMFGResult, build_tmfg, tmfg_adjacency  # noqa: F401
 
 # restore submodule attributes clobbered by same-named function imports

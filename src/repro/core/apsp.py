@@ -100,10 +100,16 @@ def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
     return est
 
 
-def apsp(W: jax.Array, *, method: str = "hub", **kw) -> jax.Array:
+def apsp(W: jax.Array, *, method: str = "hub", n_hubs: int = 0,
+         rounds: int = 32, backend: str = "auto") -> jax.Array:
+    """Dispatch to :func:`apsp_exact` or :func:`apsp_hub` by ``method``.
+
+    The signature names every knob explicitly (no ``**kw`` grab bag):
+    ``n_hubs``/``rounds`` only apply to the hub approximation and are
+    simply not forwarded to the exact path.
+    """
     if method == "exact":
-        kw.pop("n_hubs", None), kw.pop("rounds", None)
-        return apsp_exact(W, **kw)
+        return apsp_exact(W, backend=backend)
     if method == "hub":
-        return apsp_hub(W, **kw)
+        return apsp_hub(W, n_hubs=n_hubs, rounds=rounds, backend=backend)
     raise ValueError(f"unknown APSP method {method!r}")

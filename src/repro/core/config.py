@@ -1,0 +1,210 @@
+"""`PipelineConfig` — the one config object for the TMFG-DBHT pipeline.
+
+Every stage knob of the clustering pipeline lives in one frozen,
+hashable dataclass (DESIGN.md §12.1): TMFG construction
+(``method``/``prefix``/``topk``), APSP
+(``apsp_method``/``apsp_hubs``/``apsp_rounds``), the kernel dispatch
+``backend``, and the DBHT execution strategy ``dbht_impl``.  Because it
+is hashable it serves directly as
+
+  * the specialization key of the fused device executable
+    (``pipeline.run_pipeline_device``, cached per ``(cfg, shape)``),
+  * the stream scheduler's micro-batching compatibility key, and
+  * (via :meth:`PipelineConfig.content_key`) the static half of the
+    content-hash result-cache key
+
+— replacing the six parallel kwarg lists that used to be copy-threaded
+through ``core/pipeline.py``, ``stream/scheduler.py``,
+``stream/service.py`` and ``stream/cache.py``.
+
+The paper's named variants are exposed as constructors
+(:meth:`PipelineConfig.variant` plus the :meth:`opt`/:meth:`heap`/
+:meth:`corr`/:meth:`par` shorthands); :meth:`PipelineConfig.resolve`
+implements the kwarg-era precedence (a named variant overrides the
+fields it defines, caller kwargs fill the rest) so the deprecated
+loose-kwarg call sites keep resolving the exact same configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+# The paper's comparison line-up.  The one place the variant schema is
+# written down; ``core.pipeline`` re-exports this mapping unchanged.
+VARIANTS = {
+    "par-1": dict(method="orig", prefix=1, topk=0, apsp_method="exact"),
+    "par-10": dict(method="orig", prefix=10, topk=0, apsp_method="exact"),
+    "par-200": dict(method="orig", prefix=200, topk=0, apsp_method="exact"),
+    "corr": dict(method="corr", topk=0, apsp_method="exact"),
+    "heap": dict(method="lazy", topk=0, apsp_method="exact"),
+    "opt": dict(method="lazy", topk=64, apsp_method="hub"),
+}
+
+_METHODS = ("lazy", "corr", "orig")
+_APSP_METHODS = ("exact", "hub")
+_DBHT_IMPLS = ("device", "host")
+_BACKENDS = ("auto", "pallas", "interpret", "jnp")
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Frozen, hashable bundle of every pipeline stage knob.
+
+    Fields (defaults reproduce the paper's OPT-TDBHT):
+      method:      TMFG construction — "lazy" | "corr" | "orig".
+      prefix:      prefix size P for method="orig".
+      topk:        up-front candidate-table width (0 disables).
+      apsp_method: "hub" (paper optimization C3) | "exact".
+      apsp_hubs:   hub count for hub-APSP; 0 = ceil(sqrt(n)).
+      apsp_rounds: Bellman-Ford rounds for the hub rows.
+      backend:     kernel dispatch — "auto" | "pallas" | "interpret" | "jnp".
+      dbht_impl:   DBHT execution strategy — "device" | "host" (§11.4).
+    """
+
+    method: str = "lazy"
+    prefix: int = 10
+    topk: int = 64
+    apsp_method: str = "hub"
+    apsp_hubs: int = 0
+    apsp_rounds: int = 32
+    backend: str = "auto"
+    dbht_impl: str = "device"
+
+    def __post_init__(self):
+        if self.method not in _METHODS:
+            raise ValueError(f"unknown method {self.method!r}; "
+                             f"have {_METHODS}")
+        if self.apsp_method not in _APSP_METHODS:
+            raise ValueError(f"unknown APSP method {self.apsp_method!r}; "
+                             f"have {_APSP_METHODS}")
+        if self.dbht_impl not in _DBHT_IMPLS:
+            raise ValueError(f"unknown DBHT impl {self.dbht_impl!r}; "
+                             f"have {_DBHT_IMPLS}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"have {_BACKENDS}")
+        if self.prefix < 1:
+            raise ValueError(f"prefix must be >= 1, got {self.prefix}")
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def variant(cls, name: str, **overrides) -> "PipelineConfig":
+        """The named paper variant as a config (see VARIANTS).
+
+        ``overrides`` fill the fields the variant does not define
+        (backend, dbht_impl, apsp_hubs/rounds — and prefix for the
+        non-"orig" variants); a field the variant defines cannot be
+        overridden, matching the kwarg-era precedence.
+        """
+        fields = dict(VARIANTS[name])
+        clash = set(fields) & set(overrides)
+        if clash:
+            raise ValueError(
+                f"variant {name!r} defines {sorted(clash)}; drop the "
+                f"override or build PipelineConfig(...) directly")
+        return cls(**fields, **overrides)
+
+    @classmethod
+    def opt(cls, **overrides) -> "PipelineConfig":
+        """OPT-TDBHT (the production default)."""
+        return cls.variant("opt", **overrides)
+
+    @classmethod
+    def heap(cls, **overrides) -> "PipelineConfig":
+        """HEAP-TDBHT (lazy construction, exact APSP)."""
+        return cls.variant("heap", **overrides)
+
+    @classmethod
+    def corr(cls, **overrides) -> "PipelineConfig":
+        """CORR-TDBHT (Algorithm 1, eager)."""
+        return cls.variant("corr", **overrides)
+
+    @classmethod
+    def par(cls, prefix: int = 10, **overrides) -> "PipelineConfig":
+        """PAR-TDBHT-P (Yu & Shun baseline with prefix P)."""
+        return cls(method="orig", prefix=prefix, topk=0,
+                   apsp_method="exact", **overrides)
+
+    @classmethod
+    def resolve(cls, variant: Optional[str] = None,
+                config: Optional["PipelineConfig"] = None,
+                **kwargs) -> "PipelineConfig":
+        """The one funnel from the deprecated kwarg surface to a config.
+
+        Precedence (identical to the kwarg-era ``resolve_variant``):
+        an explicit ``config`` wins wholesale — combining it with
+        ``variant`` or any loose (non-None) kwarg is rejected rather
+        than silently dropped, so ``cluster(config=cfg,
+        dbht_impl="host")`` cannot quietly run the device path;
+        otherwise a named ``variant`` overrides the fields it defines
+        and caller kwargs fill the rest; otherwise the kwargs (with
+        the dataclass defaults) stand.  None-valued kwargs mean
+        "not specified" throughout.
+        """
+        kwargs = {k: v for k, v in kwargs.items() if v is not None}
+        if config is not None:
+            if variant is not None or kwargs:
+                clash = (["variant"] if variant is not None else []) \
+                    + sorted(kwargs)
+                raise ValueError(
+                    f"config= conflicts with {clash}: pass one surface, "
+                    f"or use config.replace(...)")
+            return config
+        if variant is None:
+            return cls(**kwargs)
+        fields = dict(VARIANTS[variant])
+        fields.update({k: v for k, v in kwargs.items() if k not in fields})
+        return cls(**fields)
+
+    # -- key material -------------------------------------------------------
+    def content_key(self) -> Tuple:
+        """The static half of the content-hash result-cache key.
+
+        ``dbht_impl`` is deliberately absent: it selects an execution
+        strategy, not semantics — the §11.4 parity contract makes
+        device and host results identical, so cached results are shared
+        across impls.  Everything else changes the answer (or, for
+        backend, may change float rounding) and must split the cache.
+        """
+        return (self.method, self.prefix, self.topk, self.apsp_method,
+                self.apsp_hubs, self.apsp_rounds, self.backend)
+
+    def replace(self, **changes) -> "PipelineConfig":
+        """A copy with ``changes`` applied (frozen-dataclass update)."""
+        return dataclasses.replace(self, **changes)
+
+
+class ConfigFields:
+    """Mixin: kwarg-era read-only accessors delegating to ``self.cfg``.
+
+    The stream layer's request/service objects used to carry the six
+    loose config fields directly; they now hold one
+    :class:`PipelineConfig` (``self.cfg``), and this mixin keeps the
+    old attribute names (``req.apsp_method`` etc.) working in exactly
+    one place instead of two copy-pasted property blocks.
+    """
+
+    _CFG_FIELDS = ("method", "prefix", "topk", "apsp_method",
+                   "backend", "dbht_impl")
+
+    def __getattr__(self, name):
+        if name in ConfigFields._CFG_FIELDS:
+            return getattr(self.cfg, name)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+
+def check_no_conflict(config: Optional[PipelineConfig], **kwargs) -> None:
+    """Shared guard for the lower-layer entry points (dbht, the sharded
+    builders): raise if ``config`` is combined with any explicit
+    (non-None) loose kwarg — the same contract
+    :meth:`PipelineConfig.resolve` enforces for the pipeline surface,
+    kept in one place so the layers cannot drift."""
+    if config is None:
+        return
+    clash = sorted(k for k, v in kwargs.items() if v is not None)
+    if clash:
+        raise ValueError(f"config= conflicts with {clash}: pass one "
+                         f"surface, or use config.replace(...)")

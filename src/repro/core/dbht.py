@@ -35,7 +35,6 @@ Pipeline (both impls compute exactly these steps):
 
 from __future__ import annotations
 
-import functools
 import math
 from dataclasses import dataclass
 from typing import List, Optional
@@ -47,8 +46,11 @@ import jax.numpy as jnp
 from jax import lax
 
 import repro.core.apsp as apsp_mod
+import repro.core.config as config_mod
 import repro.core.hac as hac_mod
+import repro.core.jitcache as jitcache
 import repro.core.tmfg as tmfg_mod
+from repro.core.config import PipelineConfig
 
 
 @dataclass
@@ -168,7 +170,8 @@ def _flow_to_converging(bubble_parent, direction, strength=None):
     return dest, converging
 
 
-def _dbht_host(S, tmfg, *, apsp_method, apsp_backend, precomputed_apsp):
+def _dbht_host(S, tmfg, *, apsp_method, apsp_backend, precomputed_apsp,
+               apsp_hubs: int = 0, apsp_rounds: int = 32):
     """The original per-matrix numpy walk (reference oracle)."""
     S = np.asarray(S, dtype=np.float64)
     n = S.shape[0]
@@ -193,6 +196,7 @@ def _dbht_host(S, tmfg, *, apsp_method, apsp_backend, precomputed_apsp):
     else:
         W = apsp_mod.edge_lengths(n, jnp.asarray(edges), jnp.asarray(S))
         D = np.asarray(apsp_mod.apsp(W, method=apsp_method,
+                                     n_hubs=apsp_hubs, rounds=apsp_rounds,
                                      backend=apsp_backend))
 
     # 8. fine bubble assignment: nearest (mean APSP) bubble in the cluster
@@ -337,24 +341,34 @@ def _dbht_device_core(S, edges, bubble_parent, bubble_tri, bubble_verts,
                 cluster_of=cluster_of, bubble_of=bubble_of, D=D, Z=Z)
 
 
-@functools.lru_cache(maxsize=None)
-def _device_dbht_jit(apsp_method: str, backend: str, precomputed: bool,
-                     batched: bool):
-    """Cached jitted (optionally vmapped) device DBHT program per static
-    config, so repeated calls reuse one compiled executable per shape."""
+def _device_dbht_jit(apsp_method: str, apsp_hubs: int, apsp_rounds: int,
+                     backend: str, precomputed: bool, batched: bool,
+                     shape=None):
+    """Jitted (optionally vmapped) device DBHT program per static config
+    AND input shape, held in the shared bounded executable cache
+    (DESIGN.md §12.3) so repeated calls reuse one compiled executable
+    without the unbounded growth of the old per-module lru_cache —
+    shape is part of the key so evicting an entry actually frees its
+    compiled code (a shape-free key would keep one hot jit callable
+    accumulating per-shape XLA executables forever)."""
 
-    def with_apsp(S, edges, bp, bt, bv, hb):
-        W = apsp_mod.edge_lengths(S.shape[0], edges, S)
-        D = apsp_mod.apsp(W, method=apsp_method, backend=backend)
-        return _dbht_device_core(S, edges, bp, bt, bv, hb, D,
-                                 backend=backend)
+    def build():
+        def with_apsp(S, edges, bp, bt, bv, hb):
+            W = apsp_mod.edge_lengths(S.shape[0], edges, S)
+            D = apsp_mod.apsp(W, method=apsp_method, n_hubs=apsp_hubs,
+                              rounds=apsp_rounds, backend=backend)
+            return _dbht_device_core(S, edges, bp, bt, bv, hb, D,
+                                     backend=backend)
 
-    def with_D(S, edges, bp, bt, bv, hb, D):
-        return _dbht_device_core(S, edges, bp, bt, bv, hb, D,
-                                 backend=backend)
+        def with_D(S, edges, bp, bt, bv, hb, D):
+            return _dbht_device_core(S, edges, bp, bt, bv, hb, D,
+                                     backend=backend)
 
-    f = with_D if precomputed else with_apsp
-    return jax.jit(jax.vmap(f) if batched else f)
+        f = with_D if precomputed else with_apsp
+        return jax.jit(jax.vmap(f) if batched else f)
+
+    return jitcache.cached(("dbht", apsp_method, apsp_hubs, apsp_rounds,
+                            backend, precomputed, batched, shape), build)
 
 
 def _result_from_device(out, b=None) -> DBHTResult:
@@ -373,7 +387,29 @@ def _tmfg_args(tmfg):
             jnp.asarray(tmfg.home_bubble))
 
 
-def dbht_batch(S, tmfg, *, apsp_method: str = "hub", backend: str = "auto",
+def _apsp_knobs(config, kwargs):
+    """Resolve the APSP knobs from ``config`` XOR loose kwargs
+    (config.check_no_conflict enforces the XOR); without a config, None
+    kwargs take the dataclass defaults."""
+    config_mod.check_no_conflict(config, **kwargs)
+    if config is not None:
+        return (config.apsp_method, config.apsp_hubs, config.apsp_rounds,
+                config.backend)
+    d = PipelineConfig()
+    backend = kwargs.get("backend", kwargs.get("apsp_backend"))
+    return (kwargs.get("apsp_method") or d.apsp_method,
+            d.apsp_hubs if kwargs.get("apsp_hubs") is None
+            else kwargs["apsp_hubs"],
+            d.apsp_rounds if kwargs.get("apsp_rounds") is None
+            else kwargs["apsp_rounds"],
+            backend or d.backend)
+
+
+def dbht_batch(S, tmfg, *, apsp_method: Optional[str] = None,
+               backend: Optional[str] = None,
+               apsp_hubs: Optional[int] = None,
+               apsp_rounds: Optional[int] = None,
+               config: Optional[PipelineConfig] = None,
                limit: Optional[int] = None) -> List[DBHTResult]:
     """Batched device DBHT: (B, n, n) similarities + batched TMFG arrays.
 
@@ -382,11 +418,18 @@ def dbht_batch(S, tmfg, *, apsp_method: str = "hub", backend: str = "auto",
     transfer; no per-matrix host work happens until the final (cheap)
     result unpacking (DESIGN.md §11.4).  ``limit`` slices the transfer:
     pad entries of a bucketed micro-batch pay device FLOPs only.
+    ``config`` supplies the APSP knobs + backend from one
+    :class:`PipelineConfig` instead of the loose kwargs (combining the
+    two surfaces is rejected, as in ``PipelineConfig.resolve``).
     """
+    apsp_method, apsp_hubs, apsp_rounds, backend = _apsp_knobs(
+        config, dict(apsp_method=apsp_method, apsp_hubs=apsp_hubs,
+                     apsp_rounds=apsp_rounds, backend=backend))
     S_b = jnp.asarray(S, jnp.float32)
     B = S_b.shape[0]
     B_out = B if limit is None else min(limit, B)
-    fn = _device_dbht_jit(apsp_method, backend, False, True)
+    fn = _device_dbht_jit(apsp_method, apsp_hubs, apsp_rounds, backend,
+                          False, True, S_b.shape)
     out = fn(S_b, *_tmfg_args(tmfg))
     out = jax.device_get({k: v[:B_out] for k, v in out.items()})
     return [_result_from_device(out, b) for b in range(B_out)]
@@ -396,9 +439,12 @@ def dbht_batch(S, tmfg, *, apsp_method: str = "hub", backend: str = "auto",
 # main entry
 # ---------------------------------------------------------------------------
 
-def dbht(S, tmfg, *, apsp_method: str = "hub", apsp_backend: str = "auto",
+def dbht(S, tmfg, *, apsp_method: Optional[str] = None,
+         apsp_backend: Optional[str] = None,
+         apsp_hubs: Optional[int] = None, apsp_rounds: Optional[int] = None,
          precomputed_apsp: Optional[np.ndarray] = None,
-         impl: str = "device") -> DBHTResult:
+         config: Optional[PipelineConfig] = None,
+         impl: Optional[str] = None) -> DBHTResult:
     """Run DBHT on a TMFG (accepts JAX or numpy TMFGResult fields).
 
     ``impl`` selects the execution strategy (DESIGN.md §11.4):
@@ -406,20 +452,33 @@ def dbht(S, tmfg, *, apsp_method: str = "hub", apsp_backend: str = "auto",
     program with a single device→host transfer; ``"host"`` is the numpy
     reference walk.  Both return identical labels, linkage, converging
     set and assignments on the same inputs (the parity contract).
+    ``config`` supplies apsp_method/hubs/rounds, backend and the impl
+    from one :class:`PipelineConfig` instead of the loose kwargs;
+    combining the two surfaces is rejected — except ``impl``, the one
+    deliberate override, so the parity tests can pin both impls of one
+    config.
     """
+    apsp_method, apsp_hubs, apsp_rounds, apsp_backend = _apsp_knobs(
+        config, dict(apsp_method=apsp_method, apsp_hubs=apsp_hubs,
+                     apsp_rounds=apsp_rounds, apsp_backend=apsp_backend))
+    if impl is None:
+        impl = config.dbht_impl if config is not None else "device"
     if impl == "host":
         return _dbht_host(S, tmfg, apsp_method=apsp_method,
                           apsp_backend=apsp_backend,
+                          apsp_hubs=apsp_hubs, apsp_rounds=apsp_rounds,
                           precomputed_apsp=precomputed_apsp)
     if impl != "device":
         raise ValueError(f"unknown DBHT impl {impl!r}")
 
     S_j = jnp.asarray(S, jnp.float32)
     if precomputed_apsp is not None:
-        fn = _device_dbht_jit(apsp_method, apsp_backend, True, False)
+        fn = _device_dbht_jit(apsp_method, apsp_hubs, apsp_rounds,
+                              apsp_backend, True, False, S_j.shape)
         out = fn(S_j, *_tmfg_args(tmfg),
                  jnp.asarray(precomputed_apsp, jnp.float32))
     else:
-        fn = _device_dbht_jit(apsp_method, apsp_backend, False, False)
+        fn = _device_dbht_jit(apsp_method, apsp_hubs, apsp_rounds,
+                              apsp_backend, False, False, S_j.shape)
         out = fn(S_j, *_tmfg_args(tmfg))
     return _result_from_device(jax.device_get(out))

@@ -34,6 +34,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as dist_sh
+from . import config as config_mod
+from .config import PipelineConfig
 from .tmfg import TMFGResult, _State, _face_pair, _init_state, _insert_one
 
 NEG = -jnp.inf
@@ -135,16 +137,25 @@ def _sharded_gather_many_factory(S_local, n_local, axis):
 
 
 def build_tmfg_sharded(S: jax.Array, mesh: Mesh, *, axis="data",
-                       method: str = "lazy",
-                       collectives: str = "batched") -> TMFGResult:
+                       method: Optional[str] = None,
+                       collectives: str = "batched",
+                       config: Optional[PipelineConfig] = None) -> TMFGResult:
     """TMFG construction with S column-sharded over ``axis``.
 
     State is replicated; every row scan is distributed.  Produces bitwise
     the same result as the single-device ``build_tmfg`` (verified in
     tests/test_distributed.py).  ``collectives="batched"`` (default) fuses
     each step's lookups into one all-gather + one psum; "per-element" is
-    the naive baseline kept for the §Perf A/B.
+    the naive baseline kept for the §Perf A/B.  ``config`` supplies the
+    construction method from one :class:`PipelineConfig` (DESIGN.md
+    §12.1) instead of the loose kwarg; combining the two surfaces is
+    rejected, as in ``PipelineConfig.resolve``.
     """
+    config_mod.check_no_conflict(config, method=method)
+    if config is not None:
+        method = config.method
+    elif method is None:
+        method = "lazy"
     n = S.shape[0]
     d = _axis_total(mesh, axis)
     assert n % d == 0, f"n={n} must divide the '{axis}' axes ({d})"
@@ -455,15 +466,26 @@ def _result_of(st) -> TMFGResult:
 # ---------------------------------------------------------------------------
 
 def apsp_hub_sharded(W: jax.Array, mesh: Mesh, *, axis="data",
-                     n_hubs: int = 0, rounds: int = 32) -> jax.Array:
+                     n_hubs: Optional[int] = None,
+                     rounds: Optional[int] = None,
+                     config: Optional[PipelineConfig] = None) -> jax.Array:
     """Hub APSP with W row-sharded; returns row-sharded distance estimate.
 
     Per Bellman-Ford round each device contributes the min-plus partial for
     its row block of W; one (h, n) min-all-reduce combines (implemented as
     -psum of negated… no — lax.pmin exists via psum? use all_gather+min).
+    ``config`` supplies ``apsp_hubs``/``apsp_rounds`` from one
+    :class:`PipelineConfig` instead of the loose kwargs; combining the
+    two surfaces is rejected, as in ``PipelineConfig.resolve``.
     """
     import math
 
+    config_mod.check_no_conflict(config, n_hubs=n_hubs, rounds=rounds)
+    if config is not None:
+        n_hubs, rounds = config.apsp_hubs, config.apsp_rounds
+    else:
+        n_hubs = 0 if n_hubs is None else n_hubs
+        rounds = 32 if rounds is None else rounds
     n = W.shape[0]
     d = _axis_total(mesh, axis)
     assert n % d == 0

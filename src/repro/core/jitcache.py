@@ -1,0 +1,86 @@
+"""Bounded cache of compiled pipeline executables (DESIGN.md §12.3).
+
+Every jitted program the pipeline builds per static configuration — the
+fused ``run_pipeline_device`` executables, the vmapped TMFG builder
+behind ``cluster_batch``, and the device DBHT programs — used to live in
+per-module ``functools.lru_cache(maxsize=None)`` closures: a compiled-
+executable leak, because XLA re-specializes per (config, shape) and a
+long-lived service (the stream scheduler's jit buckets) touches an
+unbounded set of both.  This module is the one shared, *bounded* LRU
+those call sites register into, with an explicit :func:`clear` for
+tests and long-running processes.
+
+Eviction drops the jitted callable, which releases every per-shape XLA
+executable compiled under it.  The default bound (64) is far above what
+a steady-state service needs — the stream scheduler's power-of-two
+bucketing exists precisely to keep the live set small — so eviction
+only fires under config churn, where recompiling is the lesser evil.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable
+
+DEFAULT_MAXSIZE = 64
+
+# the lru_caches this module replaces were internally locked; concurrent
+# submitters sharing the stream service get the same guarantee here
+_lock = threading.RLock()
+_cache: "OrderedDict[Hashable, Any]" = OrderedDict()
+_maxsize = DEFAULT_MAXSIZE
+_stats: Dict[str, int] = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def cached(key: Hashable, build: Callable[[], Any]) -> Any:
+    """The executable for ``key``, building (and caching) it on miss."""
+    with _lock:
+        if key in _cache:
+            fn = _cache[key]
+            _cache.move_to_end(key)
+            _stats["hits"] += 1
+            return fn
+        fn = build()
+        _stats["misses"] += 1
+        _cache[key] = fn
+        while len(_cache) > _maxsize:
+            _cache.popitem(last=False)
+            _stats["evictions"] += 1
+        return fn
+
+
+def clear() -> None:
+    """Drop every cached executable (stats are kept)."""
+    with _lock:
+        _cache.clear()
+
+
+def size() -> int:
+    with _lock:
+        return len(_cache)
+
+
+def keys():
+    """Snapshot of the cached keys, LRU-first (introspection/tests)."""
+    with _lock:
+        return list(_cache)
+
+
+def stats() -> Dict[str, int]:
+    """Copy of the hit/miss/eviction counters."""
+    with _lock:
+        return dict(_stats)
+
+
+def set_maxsize(n: int) -> int:
+    """Set the bound (evicting down to it); returns the previous bound."""
+    global _maxsize
+    if n < 1:
+        raise ValueError(f"maxsize must be >= 1, got {n}")
+    with _lock:
+        prev, _maxsize = _maxsize, n
+        while len(_cache) > _maxsize:
+            _cache.popitem(last=False)
+            _stats["evictions"] += 1
+        return prev

@@ -4,22 +4,35 @@
 Pearson similarity (fused kernel) → LAZY(heap-equivalent) TMFG with the
 up-front top-K candidate table → hub-approximate APSP → DBHT dendrogram.
 
-Every stage is switchable to reproduce the paper's other variants:
-  PAR-TDBHT-P   -> method="orig",  prefix=P, apsp="exact"
-  CORR-TDBHT    -> method="corr",  apsp="exact"
-  HEAP-TDBHT    -> method="lazy",  topk=0,   apsp="exact"
-  OPT-TDBHT     -> method="lazy",  topk=64,  apsp="hub"   (default)
+Every stage is switchable to reproduce the paper's other variants; the
+stage knobs live in one frozen, hashable :class:`PipelineConfig`
+(core/config.py, DESIGN.md §12.1) — the loose
+``method/prefix/topk/apsp_method/...`` kwargs are kept as a deprecated
+shim that resolves through the same funnel:
+
+  PAR-TDBHT-P   -> PipelineConfig.par(P)        (method="orig")
+  CORR-TDBHT    -> PipelineConfig.corr()
+  HEAP-TDBHT    -> PipelineConfig.heap()
+  OPT-TDBHT     -> PipelineConfig.opt()         (default)
+
+Execution (DESIGN.md §12.2): by default the whole pipeline — similarity,
+TMFG construction, edge lengths, APSP, the device DBHT tree stage and
+the nested HAC — runs as ONE jitted device program
+(:func:`run_pipeline_device`) with a single device→host transfer at the
+end, so a request pays one dispatch instead of three dispatch+sync
+round-trips.  ``fused=False`` restores the staged path (one jit per
+stage with a host sync between them) as the timing/debug mode
+(DESIGN.md §12.4): it reports per-stage ``timings`` where the fused
+path reports ``total`` only, and it is the only path for
+``dbht_impl="host"`` and ``reuse_tmfg=``.
 
 ``cluster_batch()`` is the throughput entry point (DESIGN.md §7.4): a
-batch of B datasets/similarity matrices is clustered data-parallel — the
-device-heavy stages (similarity, TMFG construction, and — with the
-default ``dbht_impl="device"`` — the entire DBHT stage including APSP
-and the nested HAC) run vmapped with the batch axis sharded over the
-mesh from dist/sharding.py; a single device→host transfer returns the
-batch's labels/linkage (DESIGN.md §11.4).  ``dbht_impl="host"`` restores
-the per-matrix numpy walk as the reference path.  On one device it
-degrades to the vmapped single-device program, identical to a loop of
-``cluster()`` calls (pinned by tests/test_pipeline.py).
+batch of B datasets/similarity matrices is clustered data-parallel with
+the batch axis sharded over the mesh from dist/sharding.py (the fused
+program is vmapped over the batch; one device→host transfer returns the
+batch's outputs).  On one device it degrades to the vmapped
+single-device program, identical to a loop of ``cluster()`` calls
+(pinned by tests/test_pipeline.py and tests/test_fused.py).
 """
 
 from __future__ import annotations
@@ -27,7 +40,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, NamedTuple, Optional
 
 import numpy as np
 
@@ -36,8 +49,11 @@ import jax.numpy as jnp
 
 from repro.dist import sharding as dist_sh
 from repro.kernels import ops
+import repro.core.apsp as apsp_mod
 import repro.core.dbht as dbht_mod
-from .tmfg import build_tmfg
+import repro.core.jitcache as jitcache
+from .config import PipelineConfig, VARIANTS  # noqa: F401  (re-export)
+from .tmfg import TMFGResult, build_tmfg
 
 
 @dataclass
@@ -57,28 +73,17 @@ class ClusterResult:
         return self.dbht.labels(k)
 
 
-VARIANTS = {
-    "par-1": dict(method="orig", prefix=1, topk=0, apsp_method="exact"),
-    "par-10": dict(method="orig", prefix=10, topk=0, apsp_method="exact"),
-    "par-200": dict(method="orig", prefix=200, topk=0, apsp_method="exact"),
-    "corr": dict(method="corr", topk=0, apsp_method="exact"),
-    "heap": dict(method="lazy", topk=0, apsp_method="exact"),
-    "opt": dict(method="lazy", topk=64, apsp_method="hub"),
-}
-
-
 def resolve_variant(variant: Optional[str], *, method: str = "lazy",
                     prefix: int = 10, topk: int = 64,
                     apsp_method: str = "hub"):
-    """(method, prefix, topk, apsp_method) for a named variant — or the
-    caller-supplied values untouched when ``variant`` is None.  The one
-    place the VARIANTS schema is unpacked; every consumer (cluster,
-    cluster_batch, the stream scheduler/service) goes through here."""
-    if variant is None:
-        return method, prefix, topk, apsp_method
-    v = dict(VARIANTS[variant])
-    return (v.pop("method"), v.pop("prefix", prefix), v.pop("topk"),
-            v.pop("apsp_method"))
+    """Deprecated kwarg-era shim: (method, prefix, topk, apsp_method)
+    for a named variant — or the caller-supplied values untouched when
+    ``variant`` is None.  New code should build a
+    :class:`PipelineConfig` instead; this delegates to the same
+    :meth:`PipelineConfig.resolve` funnel so both surfaces agree."""
+    cfg = PipelineConfig.resolve(variant, method=method, prefix=prefix,
+                                 topk=topk, apsp_method=apsp_method)
+    return cfg.method, cfg.prefix, cfg.topk, cfg.apsp_method
 
 
 def similarity_from_timeseries(X, *, backend: str = "auto") -> jnp.ndarray:
@@ -86,20 +91,155 @@ def similarity_from_timeseries(X, *, backend: str = "auto") -> jnp.ndarray:
     return ops.pearson(jnp.asarray(X), backend=backend)
 
 
+# ---------------------------------------------------------------------------
+# the fused one-jit device program (DESIGN.md §12.2)
+# ---------------------------------------------------------------------------
+
+class DeviceOutputs(NamedTuple):
+    """Everything the fused pipeline leaves on device: the TMFG arrays
+    plus the DBHT stage outputs, one pytree = one host transfer.
+    Batched runs carry a leading batch axis on every leaf."""
+
+    tmfg: TMFGResult          # fixed-shape TMFG arrays
+    direction: jax.Array      # (B_,) bubble-tree edge directions ([0] unused)
+    conv_mask: jax.Array      # (B_,) converging-bubble indicator
+    cluster_of: jax.Array     # (n,) coarse cluster id per vertex
+    bubble_of: jax.Array      # (n,) fine bubble assignment per vertex
+    apsp: jax.Array           # (n, n) distances used
+    linkage: jax.Array        # (n-1, 4) scipy-style dendrogram
+
+
+def _fused_one(cfg: PipelineConfig, have_S: bool):
+    """The traceable single-matrix pipeline body for ``cfg``.
+
+    Composes exactly the stages the staged path runs — ops.pearson,
+    build_tmfg, apsp.edge_lengths + apsp, the device DBHT core and the
+    nested HAC — so fused and staged outputs are identical (the §12.2
+    parity contract, pinned by tests/test_fused.py)."""
+
+    def one(arr):
+        S = arr if have_S else ops.pearson(arr, backend=cfg.backend)
+        tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
+                        topk=cfg.topk)
+        W = apsp_mod.edge_lengths(S.shape[0], tm.edges, S)
+        D = apsp_mod.apsp(W, method=cfg.apsp_method, n_hubs=cfg.apsp_hubs,
+                          rounds=cfg.apsp_rounds, backend=cfg.backend)
+        core = dbht_mod._dbht_device_core(
+            S, tm.edges, tm.bubble_parent, tm.bubble_tri, tm.bubble_verts,
+            tm.home_bubble, D, backend=cfg.backend)
+        return DeviceOutputs(
+            tmfg=tm, direction=core["direction"], conv_mask=core["conv_mask"],
+            cluster_of=core["cluster_of"], bubble_of=core["bubble_of"],
+            apsp=core["D"], linkage=core["Z"])
+
+    return one
+
+
+def run_pipeline_device(X_or_S, config: PipelineConfig, *,
+                        is_similarity: Optional[bool] = None,
+                        batched: Optional[bool] = None) -> DeviceOutputs:
+    """The whole pipeline as ONE jitted device program (DESIGN.md §12.2).
+
+    ``X_or_S`` is a time-series matrix ``(n, L)``, a similarity matrix
+    ``(n, n)``, or the batched ``(B, ...)`` form of either;
+    ``is_similarity`` disambiguates (default: square trailing dims mean
+    similarity) and ``batched`` defaults to ``ndim == 3``.  The
+    executable is specialized per ``(config, input kind, shape)`` and
+    held in the bounded shared cache (core/jitcache.py, DESIGN.md
+    §12.3), so a serving loop replaying one config+shape compiles
+    exactly once (the recompile guard in tests/test_fused.py).
+
+    Returns :class:`DeviceOutputs` — device arrays, NO host transfer:
+    callers choose what crosses the boundary (``cluster`` transfers
+    everything once; the stream scheduler's pad entries never do).
+    """
+    if config.dbht_impl != "device":
+        raise ValueError(
+            "run_pipeline_device IS the device program; "
+            "config.dbht_impl='host' has no fused form — use "
+            "cluster(..., fused=False) for the numpy oracle")
+    arr = jnp.asarray(X_or_S, jnp.float32)
+    if batched is None:
+        batched = arr.ndim == 3
+    if is_similarity is None:
+        is_similarity = arr.shape[-1] == arr.shape[-2]
+        if is_similarity and not bool(
+                jnp.all(jnp.abs(arr - jnp.swapaxes(arr, -1, -2)) <= 1e-5)):
+            # guard the inference: a square TIME-SERIES matrix silently
+            # misread as similarity would cluster garbage.  The check
+            # costs one device reduction + sync, paid only on this
+            # inference path — cluster()/cluster_batch() (and any
+            # latency-sensitive caller) pass is_similarity explicitly
+            raise ValueError(
+                f"square input {arr.shape} is not symmetric, so it is "
+                f"ambiguous: pass is_similarity= explicitly")
+
+    def build():
+        one = _fused_one(config, is_similarity)
+        return jax.jit(jax.vmap(one) if batched else one)
+
+    fn = jitcache.cached(
+        ("fused", config, is_similarity, batched, arr.shape), build)
+    return fn(arr)
+
+
+def _result_from_fused(host: DeviceOutputs, b: Optional[int] = None,
+                       k: Optional[int] = None,
+                       timings: Optional[Dict[str, float]] = None
+                       ) -> ClusterResult:
+    """ClusterResult from (host copies of) one fused-pipeline output.
+
+    The DBHT half delegates to ``dbht._result_from_device`` so the
+    unpacking convention (converging ids from the fixed-point mask, the
+    ``direction[1:]`` slice) lives in exactly one place."""
+    pick = (lambda a: a) if b is None else (lambda a, b=b: a[b])
+    tm = jax.tree.map(pick, host.tmfg)
+    res = dbht_mod._result_from_device(
+        dict(direction=host.direction, conv_mask=host.conv_mask,
+             cluster_of=host.cluster_of, bubble_of=host.bubble_of,
+             D=host.apsp, Z=host.linkage), b)
+    kk = k if k is not None else len(res.converging)
+    return ClusterResult(
+        labels=res.labels(kk), linkage=res.linkage, tmfg=tm, dbht=res,
+        edge_sum=float(tm.edge_sum), timings=timings or {})
+
+
+def clear_compiled() -> None:
+    """Drop every cached pipeline executable (core/jitcache.clear)."""
+    jitcache.clear()
+
+
+# ---------------------------------------------------------------------------
+# single-matrix entry point
+# ---------------------------------------------------------------------------
+
 def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
-            method: str = "lazy", prefix: int = 10, topk: int = 64,
-            apsp_method: str = "hub", backend: str = "auto",
+            config: Optional[PipelineConfig] = None,
+            method: Optional[str] = None, prefix: Optional[int] = None,
+            topk: Optional[int] = None, apsp_method: Optional[str] = None,
+            backend: Optional[str] = None,
             variant: Optional[str] = None, reuse_tmfg=None,
-            dbht_impl: str = "device",
+            dbht_impl: Optional[str] = None, fused: Optional[bool] = None,
             collect_timings: bool = False) -> ClusterResult:
     """Cluster time series X (n, L) — or a precomputed similarity S — with
     TMFG-DBHT.  ``k`` cuts the dendrogram into k flat clusters (defaults to
     the number of converging bubbles).
 
-    ``dbht_impl`` selects the DBHT execution strategy (DESIGN.md §11.4):
-    ``"device"`` (default) runs the whole stage as one jitted JAX
-    program; ``"host"`` is the numpy reference walk.  Labels and linkage
-    are identical either way (the parity contract).
+    ``config`` is the preferred way to select the stage configuration
+    (one :class:`PipelineConfig`); the loose
+    ``method/prefix/topk/apsp_method/backend/variant/dbht_impl`` kwargs
+    are a deprecated shim resolved through the same funnel (defaults —
+    lazy/10/64/hub/auto/device — come from the dataclass; combining
+    them with ``config=`` is rejected, use ``config.replace(...)``).
+
+    ``fused`` selects the execution plan: the default (None) runs the
+    whole pipeline as ONE jitted device program + one transfer
+    (DESIGN.md §12.2) whenever possible (``dbht_impl="device"`` and no
+    ``reuse_tmfg``), and reports a ``total``-only timing;
+    ``fused=False`` forces the staged path — one jit per stage with a
+    host sync between them — which preserves the per-stage
+    ``similarity/tmfg/dbht+apsp`` timings (the timing/debug mode,
+    DESIGN.md §12.4).
 
     Streaming hooks (DESIGN.md §10): ``moments`` takes a
     ``repro.stream.window.WindowState`` and derives S from the rolling
@@ -108,10 +248,36 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     stage on a previous window's graph (the warm-start path — caller
     asserts the similarity delta is small enough for the topology to
     still apply)."""
-    method, prefix, topk, apsp_method = resolve_variant(
-        variant, method=method, prefix=prefix, topk=topk,
-        apsp_method=apsp_method)
+    cfg = PipelineConfig.resolve(
+        variant, config, method=method, prefix=prefix, topk=topk,
+        apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
+    can_fuse = cfg.dbht_impl == "device" and reuse_tmfg is None
+    if fused is None:
+        fused = can_fuse
+    elif fused and not can_fuse:
+        raise ValueError(
+            "fused=True requires dbht_impl='device' and no reuse_tmfg "
+            "(the staged path is the host/warm-start mode)")
+
+    if fused:
+        t0 = time.perf_counter()
+        if S is not None:
+            arr, have_S = jnp.asarray(S, jnp.float32), True
+        elif moments is not None:
+            from repro.stream.window import window_similarity  # no cycle
+            arr, have_S = window_similarity(moments), True
+        else:
+            assert X is not None, "need X, S or moments"
+            arr, have_S = jnp.asarray(np.asarray(X), jnp.float32), False
+        out = run_pipeline_device(arr, cfg, is_similarity=have_S,
+                                  batched=False)
+        host = jax.device_get(out)
+        timings = {"total": time.perf_counter() - t0}
+        return _result_from_fused(
+            host, k=k, timings=timings if collect_timings else None)
+
+    # ---- staged path: per-stage jits + syncs (DESIGN.md §12.4) ----------
     timings = {}
     t0 = time.perf_counter()
     if S is None and moments is not None:
@@ -119,7 +285,7 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
         S = jax.block_until_ready(window_similarity(moments))
     elif S is None:
         assert X is not None, "need X, S or moments"
-        S = similarity_from_timeseries(np.asarray(X), backend=backend)
+        S = similarity_from_timeseries(np.asarray(X), backend=cfg.backend)
         S = jax.block_until_ready(S)
     else:
         S = jnp.asarray(S, dtype=jnp.float32)
@@ -129,13 +295,13 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     if reuse_tmfg is not None:
         tm = reuse_tmfg
     else:
-        tm = build_tmfg(S, method=method, prefix=prefix, topk=topk)
+        tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
+                        topk=cfg.topk)
         tm = jax.block_until_ready(tm)
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    res = dbht_mod.dbht(S, tm, apsp_method=apsp_method,
-                        apsp_backend=backend, impl=dbht_impl)
+    res = dbht_mod.dbht(S, tm, config=cfg, impl=cfg.dbht_impl)
     timings["dbht+apsp"] = time.perf_counter() - t0
     timings["total"] = sum(timings.values())
 
@@ -186,49 +352,68 @@ def _batched_similarity(X: jnp.ndarray, backend: str = "auto") -> jnp.ndarray:
     return jax.vmap(lambda x: ops.pearson(x, backend=backend))(X)
 
 
-@functools.lru_cache(maxsize=None)
-def _batched_tmfg(method: str, prefix: int, topk: int):
-    """Jitted vmapped TMFG build, cached per static config so repeated
-    ``cluster_batch`` calls (the throughput use case) compile once per
-    (method, prefix, topk, batch shape) instead of once per call."""
-    return jax.jit(jax.vmap(
-        lambda s: build_tmfg(s, method=method, prefix=prefix, topk=topk)))
+def _batched_tmfg(method: str, prefix: int, topk: int, shape=None):
+    """Jitted vmapped TMFG build per static config AND batch shape,
+    held in the shared bounded executable cache (DESIGN.md §12.3) so
+    repeated ``cluster_batch`` calls (the throughput use case) compile
+    once per (method, prefix, topk, batch shape) without the old
+    unbounded lru_cache's compiled-executable leak — shape in the key
+    means evicting an entry actually frees its compiled code."""
+    return jitcache.cached(
+        ("batched_tmfg", method, prefix, topk, shape),
+        lambda: jax.jit(jax.vmap(
+            lambda s: build_tmfg(s, method=method, prefix=prefix,
+                                 topk=topk))))
 
 
 def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
-                  method: str = "lazy", prefix: int = 10, topk: int = 64,
-                  apsp_method: str = "hub", backend: str = "auto",
+                  config: Optional[PipelineConfig] = None,
+                  method: Optional[str] = None, prefix: Optional[int] = None,
+                  topk: Optional[int] = None,
+                  apsp_method: Optional[str] = None,
+                  backend: Optional[str] = None,
                   variant: Optional[str] = None, mesh=None,
-                  limit: Optional[int] = None, dbht_impl: str = "device",
+                  limit: Optional[int] = None,
+                  dbht_impl: Optional[str] = None,
+                  fused: Optional[bool] = None,
                   collect_timings: bool = False) -> BatchClusterResult:
     """Cluster a batch of datasets X (B, n, L) — or precomputed similarity
     matrices S (B, n, n) — data-parallel across devices.
 
-    With the default ``dbht_impl="device"`` EVERY pipeline stage runs
-    batched on device: similarity and TMFG construction as one vmapped
-    jit'd program with the batch axis sharded over ``mesh`` (defaults to
-    a 1-D mesh over all local devices when B divides the device count;
-    falls back to single-device execution otherwise, so CPU CI takes the
-    same code path), then the whole DBHT stage — APSP, bubble-tree
-    directions, pointer-jumping flow, fine assignment and the nested
-    HAC — under one further vmap with a single device→host transfer of
-    the batch's outputs (DESIGN.md §11.4).  ``dbht_impl="host"`` restores
-    the per-matrix numpy reference walk.
+    By default (``fused=None`` with the default ``dbht_impl="device"``)
+    the ENTIRE batch pipeline — similarity, TMFG, APSP, the DBHT tree
+    stage and the nested HAC — is one vmapped jitted program
+    (:func:`run_pipeline_device`) with the batch axis sharded over
+    ``mesh`` (defaults to a 1-D mesh over all local devices when B
+    divides the device count; falls back to single-device execution
+    otherwise, so CPU CI takes the same code path) and a single
+    device→host transfer of the batch's outputs.  ``fused=False``
+    restores the staged path — per-stage jits with a host sync between
+    them, per-stage timings preserved (DESIGN.md §12.4) — and is the
+    only path for ``dbht_impl="host"`` (the per-matrix numpy reference
+    walk).
 
     ``limit`` materializes host-side results only for the first ``limit``
     entries: the stream scheduler (DESIGN.md §10.2) pads batches up to a
     bucket size so the jitted device program is reused, and the pad
-    entries must not pay host-side DBHT work (on the device path they
-    cost device FLOPs only — their outputs are never transferred).
+    entries must not pay host-side DBHT work (they cost device FLOPs
+    only — their outputs are never transferred).
 
     Returns a :class:`BatchClusterResult`; entry ``b`` is identical to
     ``cluster(X[b], ...)``.
     """
-    method, prefix, topk, apsp_method = resolve_variant(
-        variant, method=method, prefix=prefix, topk=topk,
-        apsp_method=apsp_method)
+    cfg = PipelineConfig.resolve(
+        variant, config, method=method, prefix=prefix, topk=topk,
+        apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
+
+    can_fuse = cfg.dbht_impl == "device"
+    if fused is None:
+        fused = can_fuse
+    elif fused and not can_fuse:
+        raise ValueError("fused=True requires dbht_impl='device'")
 
     timings: Dict[str, float] = {}
+    t_start = time.perf_counter()
     if S is None:
         assert X is not None, "need X or S"
         arr, have_S = jnp.asarray(X, dtype=jnp.float32), False
@@ -237,6 +422,7 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     assert arr.ndim == 3, f"batched input must be 3-D, got {arr.shape}"
     assert limit is None or limit >= 1, f"limit must be >= 1, got {limit}"
     B = arr.shape[0]
+    B_out = B if limit is None else min(limit, B)
 
     # place the batch over the mesh's data axes when it divides them;
     # otherwise stay on the default device (single-device fallback)
@@ -246,25 +432,41 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     if mesh is not None:
         arr = jax.device_put(arr, dist_sh.batch_shardings(mesh, arr))
 
+    if fused:
+        out = run_pipeline_device(arr, cfg, is_similarity=have_S,
+                                  batched=True)
+        # ONE transfer, sliced to B_out first so pad entries of a
+        # bucketed micro-batch never cross the boundary
+        host = jax.device_get(jax.tree.map(lambda a: a[:B_out], out))
+        total = time.perf_counter() - t_start
+        per = {"total": total / B}
+        results = [
+            _result_from_fused(host, b=b, k=k,
+                               timings=dict(per) if collect_timings else None)
+            for b in range(B_out)]
+        timings["total"] = total
+        return BatchClusterResult(
+            labels=np.stack([r.labels for r in results]), results=results,
+            timings=timings if collect_timings else {})
+
+    # ---- staged path (DESIGN.md §12.4) ----------------------------------
     t0 = time.perf_counter()
     if have_S:
         S_b = arr
     else:
-        S_b = jax.block_until_ready(_batched_similarity(arr, backend))
+        S_b = jax.block_until_ready(_batched_similarity(arr, cfg.backend))
     timings["similarity"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     tm_b = jax.block_until_ready(
-        _batched_tmfg(method, prefix, topk)(S_b))
+        _batched_tmfg(cfg.method, cfg.prefix, cfg.topk, S_b.shape)(S_b))
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    B_out = B if limit is None else min(limit, B)
-    if dbht_impl == "device":
+    if cfg.dbht_impl == "device":
         # the whole DBHT stage for the batch is ONE vmapped jitted
         # program plus one device→host transfer (DESIGN.md §11.4)
-        dbs = dbht_mod.dbht_batch(S_b, tm_b, apsp_method=apsp_method,
-                                  backend=backend, limit=B_out)
+        dbs = dbht_mod.dbht_batch(S_b, tm_b, config=cfg, limit=B_out)
         t_dbht = time.perf_counter() - t0
     else:
         dbs, t_dbht = None, 0.0
@@ -279,8 +481,7 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         if dbs is not None:
             res = dbs[b]
         else:
-            res = dbht_mod.dbht(S_host[b], tm, apsp_method=apsp_method,
-                                apsp_backend=backend, impl="host")
+            res = dbht_mod.dbht(S_host[b], tm, config=cfg, impl="host")
         kk = k if k is not None else len(res.converging)
         # per-result timings: the batched device stages (and the batched
         # device DBHT) amortize evenly over the B entries; the host-side

@@ -401,6 +401,7 @@ def build_tmfg(S: jax.Array, *, method: str = "lazy", prefix: int = 10,
     )
 
 
+@functools.partial(jax.jit, static_argnums=0)
 def tmfg_adjacency(n: int, edges: jax.Array, S: jax.Array) -> jax.Array:
     """Dense weighted adjacency (0 where no edge) from a TMFG edge list."""
     A = jnp.zeros((n, n), S.dtype)

@@ -4,9 +4,11 @@ Two independent mechanisms, composed by service.py:
 
 * :class:`ResultCache` — a content-hash LRU over finished
   ``ClusterResult``s.  The key is a digest of the similarity matrix
-  bytes plus the full variant config, so identical windows (common when
-  ticks repeat or multiple subscribers ask for the same stream) are
-  answered without touching the pipeline.
+  bytes plus the static config — ``(k,) + PipelineConfig.content_key()``
+  everywhere in this subsystem, the one key schema of DESIGN.md §12.1 —
+  so identical windows (common when ticks repeat or multiple
+  subscribers ask for the same stream) are answered without touching
+  the pipeline.
 * :class:`WarmStart` — rolling-window reuse.  Consecutive windows differ
   by one tick, so their similarity matrices are close; when the max
   elementwise delta to the previously clustered window is below
@@ -27,7 +29,8 @@ import numpy as np
 
 
 def content_key(S, config: Tuple) -> str:
-    """Digest of the similarity matrix bytes + the static variant config."""
+    """Digest of the similarity matrix bytes + the static config tuple
+    (``(k,) + PipelineConfig.content_key()`` in this subsystem)."""
     h = hashlib.sha1()
     arr = np.ascontiguousarray(np.asarray(S, dtype=np.float32))
     h.update(str(arr.shape).encode())

@@ -5,22 +5,26 @@ clustering pipeline: concurrent requests for TMFG-DBHT clustering are
 aggregated into *bucketed* ``cluster_batch`` calls instead of running
 one-by-one.
 
-Why bucketing matters: ``pipeline._batched_tmfg`` is an lru-cached jit
-keyed by the static config, and XLA re-specializes it per batch shape
+Why bucketing matters: the pipeline's device programs (the fused
+``run_pipeline_device`` executable and the staged per-stage jits) are
+held in the shared bounded executable cache (core/jitcache.py,
+DESIGN.md §12.3), and XLA re-specializes them per batch shape
 (B, n, n).  Padding every micro-batch up to the next bucket size
 (powers of two by default) bounds the number of distinct B values to
 log2(max_batch) — after warm-up every flush reuses a compiled program,
 which is the whole point of batching requests in the first place.  Pad
 entries repeat real matrices and their results are dropped on unpad.
+:meth:`MicroBatcher.clear_compiled` empties the cache explicitly (e.g.
+between test phases or on config rollover in a long-lived service).
 
-Requests are grouped by *compatibility key* — (n, k, method, prefix,
-topk, apsp_method, backend, dbht_impl) — because only same-shaped,
-same-config matrices can share one vmapped program.  The batch axis is
-sharded over ``mesh`` by ``cluster_batch`` itself (dist/sharding.py
-batch placement).  With the default ``dbht_impl="device"`` a flushed
+Requests are grouped by *compatibility key* — ``(n, k, cfg)`` with
+``cfg`` the request's hashable :class:`PipelineConfig` (DESIGN.md
+§12.1) — because only same-shaped, same-config matrices can share one
+vmapped program.  The batch axis is sharded over ``mesh`` by
+``cluster_batch`` itself (dist/sharding.py batch placement).  A flushed
 bucket completes the ENTIRE pipeline — similarity, TMFG, APSP, DBHT
-tree logic and HAC — on device (DESIGN.md §11.4), and
-``cluster_batch(limit=B)`` keeps the pad entries' outputs off the
+tree logic and HAC — as one fused device program (DESIGN.md §12.2),
+and ``cluster_batch(limit=B)`` keeps the pad entries' outputs off the
 device→host transfer — padding costs device FLOPs only.
 """
 
@@ -32,25 +36,27 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import pipeline
+from repro.core import jitcache, pipeline
+from repro.core.config import ConfigFields, PipelineConfig
 
 
 _UIDS = itertools.count()
 
 
 @dataclass(eq=False)        # identity semantics: the S field is an ndarray
-class ClusterRequest:
-    """One pending clustering request; filled in place at flush time."""
+class ClusterRequest(ConfigFields):
+    """One pending clustering request; filled in place at flush time.
+
+    The stage configuration is one :class:`PipelineConfig` (``cfg``);
+    the kwarg-era field names (``method``/``prefix``/...) remain
+    readable through the :class:`ConfigFields` mixin for callers of
+    the old surface.
+    """
 
     uid: int
     S: np.ndarray                      # (n, n) similarity
     k: Optional[int] = None
-    method: str = "lazy"
-    prefix: int = 10
-    topk: int = 64
-    apsp_method: str = "hub"
-    backend: str = "auto"
-    dbht_impl: str = "device"
+    cfg: PipelineConfig = field(default_factory=PipelineConfig)
     # filled by the scheduler
     result: Optional[pipeline.ClusterResult] = None
     done: bool = False
@@ -59,22 +65,22 @@ class ClusterRequest:
 
     @property
     def key(self) -> Tuple:
-        """Compatibility key: requests sharing it batch together."""
-        return (self.S.shape[0], self.k, self.method, self.prefix,
-                self.topk, self.apsp_method, self.backend, self.dbht_impl)
+        """Compatibility key: requests sharing it batch together.  The
+        full config participates (one ``cluster_batch`` call runs a
+        single config — including ``dbht_impl``, which selects the
+        execution strategy for the whole bucket)."""
+        return (self.S.shape[0], self.k, self.cfg)
 
     @property
     def config(self) -> Tuple:
-        """Static config portion (content-cache key material).
-
-        ``dbht_impl`` is deliberately absent: it selects an execution
-        strategy, not semantics — the §11.4 parity contract makes device
-        and host results identical (up to the adversarial float32
-        near-tie caveat stated there), so cached results are shared
-        across impls (it DOES participate in ``key``, because one
-        ``cluster_batch`` call runs a single impl)."""
-        return (self.k, self.method, self.prefix, self.topk,
-                self.apsp_method, self.backend)
+        """Static config portion (content-cache key material): ``k``
+        plus :meth:`PipelineConfig.content_key`, which deliberately
+        excludes ``dbht_impl`` — it selects an execution strategy, not
+        semantics (the §11.4 parity contract makes device and host
+        results identical, up to the adversarial float32 near-tie
+        caveat stated there), so cached results are shared across
+        impls."""
+        return (self.k,) + self.cfg.content_key()
 
 
 def bucket_size(b: int, buckets: Tuple[int, ...]) -> int:
@@ -115,23 +121,27 @@ class MicroBatcher:
         return len(self.queue)
 
     def submit(self, S, *, k: Optional[int] = None,
-               variant: Optional[str] = None, **cfg) -> ClusterRequest:
-        """Enqueue one similarity matrix for clustering."""
-        if variant is not None:
-            # same precedence as cluster(): the named variant overrides
-            # the fields it defines, caller kwargs fill the rest — so the
-            # batched path resolves the exact config (and content-cache
-            # key) the single-matrix path would
-            defaults = {f: cfg[f] for f in
-                        ("method", "prefix", "topk", "apsp_method")
-                        if f in cfg}
-            (cfg["method"], cfg["prefix"], cfg["topk"],
-             cfg["apsp_method"]) = pipeline.resolve_variant(
-                 variant, **defaults)
+               config: Optional[PipelineConfig] = None,
+               variant: Optional[str] = None, **cfg_kwargs) -> ClusterRequest:
+        """Enqueue one similarity matrix for clustering.
+
+        ``config`` is the preferred configuration surface; ``variant``
+        plus loose kwargs remain as the deprecated shim, resolved
+        through the same :meth:`PipelineConfig.resolve` funnel as
+        ``cluster()`` — so the batched path resolves the exact config
+        (and content-cache key) the single-matrix path would.
+        """
+        cfg = PipelineConfig.resolve(variant, config, **cfg_kwargs)
         req = ClusterRequest(uid=next(_UIDS),
-                             S=np.asarray(S, dtype=np.float32), k=k, **cfg)
+                             S=np.asarray(S, dtype=np.float32), k=k, cfg=cfg)
         self.queue.append(req)
         return req
+
+    @staticmethod
+    def clear_compiled() -> None:
+        """Drop every cached pipeline executable (the shared bounded
+        cache the jit buckets compile into — core/jitcache.clear)."""
+        jitcache.clear()
 
     # -- flushing -----------------------------------------------------------
     def _content_key(self, r: ClusterRequest) -> str:
@@ -153,10 +163,7 @@ class MicroBatcher:
             stack = np.stack([r.S for r in chunk]
                              + [chunk[-1].S] * (pad_to - B))
             bres = pipeline.cluster_batch(
-                S=stack, k=r0.k, method=r0.method, prefix=r0.prefix,
-                topk=r0.topk, apsp_method=r0.apsp_method,
-                backend=r0.backend, dbht_impl=r0.dbht_impl,
-                mesh=self.mesh, limit=B)
+                S=stack, k=r0.k, config=r0.cfg, mesh=self.mesh, limit=B)
             self.batches_run += 1
             self.requests_run += B
             for r, res in zip(chunk, bres.results):   # pads drop here

@@ -29,25 +29,35 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import pipeline
+from repro.core.config import ConfigFields, PipelineConfig
 from .cache import ResultCache, WarmStart, content_key
 from .scheduler import ClusterRequest, MicroBatcher
 from .window import WindowState, window_init, window_push, window_similarity
 
 
-class ClusterService:
-    """Streaming rolling-window clustering with micro-batching + caching."""
+class ClusterService(ConfigFields):
+    """Streaming rolling-window clustering with micro-batching + caching.
+
+    The stage configuration is one :class:`PipelineConfig` (``config``,
+    or the ``variant``/``backend``/``dbht_impl`` shim resolved through
+    the same funnel — DESIGN.md §12.1); ``self.cfg`` is the single
+    object every downstream key (batching, content cache, warm start)
+    derives from.
+    """
 
     def __init__(self, n: int, window: int, *, k: Optional[int] = None,
-                 variant: str = "opt", backend: str = "auto", mesh=None,
+                 variant: Optional[str] = None,
+                 config: Optional[PipelineConfig] = None,
+                 backend: Optional[str] = None, mesh=None,
                  max_batch: int = 8, cache_size: int = 128,
                  reuse_threshold: float = 0.0, tmfg_threshold: float = 0.0,
                  recluster_every: int = 0, min_ticks: Optional[int] = None,
-                 dbht_impl: str = "device"):
-        (self.method, self.prefix, self.topk,
-         self.apsp_method) = pipeline.resolve_variant(variant)
+                 dbht_impl: Optional[str] = None):
+        if config is None and variant is None:
+            variant = "opt"                    # the historical default
+        self.cfg = PipelineConfig.resolve(
+            variant, config, backend=backend, dbht_impl=dbht_impl)
         self.k = k
-        self.backend = backend
-        self.dbht_impl = dbht_impl
 
         self.state: WindowState = window_init(n, window)
         self.cache = ResultCache(cache_size)
@@ -60,6 +70,8 @@ class ClusterService:
         self.latest: Optional[pipeline.ClusterResult] = None
         self._warm_k: Optional[int] = None
         self.warm_hits = 0
+        # kwarg-era accessors (svc.method/prefix/...) come from the
+        # ConfigFields mixin, delegating to self.cfg
 
     # -- streaming ----------------------------------------------------------
     def tick(self, x) -> Optional[ClusterRequest]:
@@ -89,13 +101,11 @@ class ClusterService:
         """
         S = self.similarity() if S is None else np.asarray(S, np.float32)
         kk = self.k if k is None else k
-        cfg = dict(method=self.method, prefix=self.prefix, topk=self.topk,
-                   apsp_method=self.apsp_method, backend=self.backend,
-                   dbht_impl=self.dbht_impl)
         # uid=-1 marks "answered without queueing"; req.config is the ONE
-        # key schema — the same tuple the batcher digests for its LRU and
-        # in-flush dedupe, so service- and batcher-written entries match
-        req = ClusterRequest(uid=-1, S=S, k=kk, **cfg)
+        # key schema — (k,) + cfg.content_key(), the same tuple the
+        # batcher digests for its LRU and in-flush dedupe, so service-
+        # and batcher-written entries match (DESIGN.md §12.1)
+        req = ClusterRequest(uid=-1, S=S, k=kk, cfg=self.cfg)
 
         tier, payload = self.warm.lookup(S)
         if tier == "reuse":
@@ -115,9 +125,7 @@ class ClusterService:
             return req
         if tier == "tmfg":
             res = pipeline.cluster(S=S, k=kk, reuse_tmfg=payload,
-                                   apsp_method=self.apsp_method,
-                                   backend=self.backend,
-                                   dbht_impl=self.dbht_impl)
+                                   config=self.cfg)
             req.result, req.done = res, True
             self.warm_hits += 1
             # warm-tier results feed the LRU too: a repeated window must
@@ -133,7 +141,7 @@ class ClusterService:
             self._record(S, hit, kk)
             return req
 
-        req = self.batcher.submit(S, k=kk, **cfg)
+        req = self.batcher.submit(S, k=kk, config=self.cfg)
         req.ck = ck                        # digest already paid for above
         return req
 

@@ -87,8 +87,13 @@ def test_device_matches_host_degenerate_small_n(n, variant):
     """The PR 2 prefix-fix regime: graphs with 1-5 bubbles, prefix far
     larger than the face count.  Both impls must agree exactly."""
     X, _ = make_dataset(n, 24, 2, noise=0.7, seed=n)
+    # fused=False: the §11.4 contract is bitwise parity of the two DBHT
+    # impls on IDENTICAL inputs, so both sides take the staged plan
+    # (the fused program's cross-stage XLA fusion may shift the shared
+    # upstream distances by ulps — fused-vs-staged parity is pinned at
+    # the label/linkage level in tests/test_fused.py, DESIGN.md §12.2)
     rh = cluster(X, variant=variant, dbht_impl="host")
-    rd = cluster(X, variant=variant, dbht_impl="device")
+    rd = cluster(X, variant=variant, dbht_impl="device", fused=False)
     np.testing.assert_array_equal(rh.labels, rd.labels)
     _assert_dbht_equal(rh.dbht, rd.dbht, msg=f"n={n} {variant}")
 
@@ -99,7 +104,10 @@ def test_cluster_batch_device_dbht_parity(variant):
     cluster_batch equals the host-impl single-matrix pipeline."""
     Xs = [make_dataset(48, 40, 3, noise=0.7, seed=s)[0] for s in range(3)]
     S = np.stack([np.corrcoef(x).astype(np.float32) for x in Xs])
-    bres = cluster_batch(S=S, k=3, variant=variant, dbht_impl="device")
+    # fused=False: this pins the staged dbht_batch stage bitwise against
+    # the host walk (see test_device_matches_host_degenerate_small_n)
+    bres = cluster_batch(S=S, k=3, variant=variant, dbht_impl="device",
+                         fused=False)
     for b in range(S.shape[0]):
         single = cluster(S=S[b], k=3, variant=variant, dbht_impl="host")
         np.testing.assert_array_equal(
@@ -115,7 +123,8 @@ def test_cluster_batch_degenerate_small_n_batch():
     bubbles, one tree edge) — including the limit/pad path."""
     Xs = [make_dataset(5, 24, 2, noise=0.7, seed=s)[0] for s in range(4)]
     X = np.stack(Xs)
-    bres = cluster_batch(X, variant="par-200", dbht_impl="device", limit=3)
+    bres = cluster_batch(X, variant="par-200", dbht_impl="device", limit=3,
+                         fused=False)
     assert len(bres) == 3
     for b in range(3):
         single = cluster(Xs[b], variant="par-200", dbht_impl="host")

@@ -38,6 +38,7 @@ def test_design_md_exists_and_has_sections():
     for must in ("1", "2", "4.2", "4.3", "4.4", "5", "6", "9",
                  "10", "10.1", "10.2", "10.3", "10.4",
                  "11", "11.1", "11.2", "11.3", "11.4",
+                 "12", "12.1", "12.2", "12.3", "12.4",
                  "Arch-applicability"):
         assert must in sections, f"DESIGN.md lost §{must}"
 
@@ -48,6 +49,16 @@ def test_device_dbht_sections_are_cited_from_code():
     extends to the device DBHT spec)."""
     refs = _cited_refs()
     for sub in ("11", "11.1", "11.2", "11.3", "11.4"):
+        assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_fused_pipeline_sections_are_cited_from_code():
+    """§12's spec stays honest the same way (ISSUE 4): the config
+    object, the fused program, the bounded executable cache and the
+    staged timing mode must each be cited from at least one docstring
+    in src/tests/benchmarks."""
+    refs = _cited_refs()
+    for sub in ("12", "12.1", "12.2", "12.3", "12.4"):
         assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
 
 

@@ -407,9 +407,10 @@ class TestClusterService:
         assert warm.tmfg is first.tmfg             # topology reused
         assert warm.labels.shape == (n,)
         # warm-tier results land in the LRU: the same window resubmitted
-        # after the warm state moves on must be a cache hit, not a rerun
-        ck = content_key(S_warm, (3, svc.method, svc.prefix, svc.topk,
-                                  svc.apsp_method, svc.backend))
+        # after the warm state moves on must be a cache hit, not a rerun.
+        # The key schema is (k,) + PipelineConfig.content_key() —
+        # dbht_impl deliberately absent (DESIGN.md §12.1)
+        ck = content_key(S_warm, (3,) + svc.cfg.content_key())
         assert svc.cache.peek(ck) is warm
         # the result is marked as carrying a reused topology, so recording
         # it (now, or later via an LRU hit of the same bytes) advances the
