@@ -13,6 +13,7 @@ columns).  Sections:
   apsp  exact vs hub APSP              (bench_apsp)
   stream  streaming window + service   (bench_stream)
   pipeline  fused vs staged latency    (bench_pipeline)
+  approx  dense vs top-K similarity    (bench_approx)
   roofline  dry-run roofline table     (roofline; needs results/dryrun)
 
 ``--strict`` turns section failures into a nonzero exit code (CI);
@@ -27,9 +28,9 @@ import json
 import sys
 import time
 
-from . import (bench_apsp, bench_ari, bench_breakdown, bench_edgesum,
-               bench_pipeline, bench_speedup, bench_stream, bench_tmfg,
-               roofline)
+from . import (bench_approx, bench_apsp, bench_ari, bench_breakdown,
+               bench_edgesum, bench_pipeline, bench_speedup, bench_stream,
+               bench_tmfg, roofline)
 
 SECTIONS = {
     "fig2": lambda scale: bench_tmfg.run(scale),
@@ -40,6 +41,7 @@ SECTIONS = {
     "apsp": lambda scale: bench_apsp.run(scale),
     "stream": lambda scale: bench_stream.run(scale),
     "pipeline": lambda scale: bench_pipeline.run(scale),
+    "approx": lambda scale: bench_approx.run(scale),
     "roofline": lambda scale: roofline.run(),
 }
 

@@ -1,0 +1,25 @@
+"""`repro.approx` — sparse-similarity clustering that never materializes
+the (n, n) matrix (DESIGN.md §13).
+
+The dense pipeline's memory and Pearson FLOPs cap it at a few thousand
+series even though TMFG only ever keeps 3n-8 edges.  This subsystem
+opens the next scale regime:
+
+  * project.py — seeded random-projection sketches → candidate pools
+    (the FLOPs lever, §13.1)
+  * knn.py     — exact-rescoring blocked top-K Pearson tables via the
+    streaming kernels/topk.py kernel (the memory lever, §13.2)
+  * sparse_tmfg.py — the lazy gain scan on the (n, K) table with the
+    dense-row fallback + fallback/recall counters (§13.3)
+  * quality.py — edge recall / edge-sum ratio / ARI vs the dense path
+    (§13.4)
+
+Pipeline entry: ``cluster(X, config=PipelineConfig.approx(sim_k=K))``.
+"""
+
+from .knn import (TopKTable, rescore_pools, topk_from_similarity,  # noqa: F401
+                  topk_pearson)
+from .project import candidate_pools, sketch  # noqa: F401
+from .quality import compare_to_dense, edge_recall, edge_sum_ratio  # noqa: F401,E501
+from .sparse_tmfg import (SparseCounters, build_tmfg_sparse,  # noqa: F401
+                          sparse_lazy_tmfg)

@@ -1,0 +1,53 @@
+"""Seeded random-projection sketches → per-row candidate pools
+(DESIGN.md §13.1).
+
+The FLOPs half of the a-TMFG recipe: Pearson correlation of
+standardized rows is a cosine similarity, and a Johnson-Lindenstrauss
+random projection preserves cosines to ~1/sqrt(d).  Projecting
+``X (n, L)`` to ``(n, d)`` with ``d << L`` and running the SAME
+streaming blocked top-K kernel on the sketch yields candidate pools
+for O(n²·d) FLOPs instead of O(n²·L) — which ``knn.rescore_pools``
+then rescores with exact Pearson dots (sketches propose, exact dots
+dispose).
+
+Everything is seeded and jit-deterministic: the same (seed, dim)
+always produces the same pools, so pool-based tables are cacheable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import standardize_rows
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def sketch(X, *, dim: int = 64, seed: int = 0) -> jax.Array:
+    """(n, L) → (n, dim) seeded Gaussian random-projection sketch.
+
+    Rows are standardized FIRST (so the sketch approximates Pearson,
+    not raw cosine), then projected by a fixed N(0, 1/dim) matrix."""
+    X = jnp.asarray(X, jnp.float32)
+    Z = standardize_rows(X)
+    L = X.shape[1]
+    R = jax.random.normal(jax.random.PRNGKey(seed), (L, dim),
+                          jnp.float32) / jnp.sqrt(float(dim))
+    return Z @ R
+
+
+def candidate_pools(X, pool: int, *, dim: int = 64, seed: int = 0,
+                    backend: str = "auto") -> jax.Array:
+    """Per-row candidate pools from the sketch: (n, pool) i32 indices.
+
+    The pool is the sketch-similarity top-``pool`` of each row —
+    computed with the same streaming blocked kernel as the exact path
+    (``ops.topk`` on the (n, dim) sketch), so pool construction is
+    also O(n·pool) memory, never (n, n)."""
+    s = sketch(X, dim=dim, seed=seed)
+    pool = min(int(pool), s.shape[0] - 1)
+    _, idx = ops.topk(s, pool, backend=backend)
+    return idx

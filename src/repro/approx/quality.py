@@ -1,0 +1,68 @@
+"""Approximation-quality harness: approx vs dense path (DESIGN.md §13.4).
+
+How much TMFG does a ``sim_k``-wide candidate table recover?  Three
+scale-free metrics, all measured against the dense pipeline on the
+same data:
+
+  * TMFG edge recall — |E_approx ∩ E_dense| / (3n-6): the a-TMFG
+    paper's headline metric (near-1 at modest K on correlated data).
+  * edge-sum ratio — approx total similarity captured / dense (the
+    paper's own Fig. 7 quantity, re-used as an approximation gauge).
+  * ARI agreement — adjusted Rand index of the two flat clusterings
+    (``core/ari.py``): the end-to-end answer-quality number the
+    bench/test acceptance floors gate on.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.ari import ari
+from repro.core.config import PipelineConfig
+from repro.core.pipeline import cluster
+
+
+def edge_set(edges) -> set:
+    """Undirected TMFG edge set as frozen (min, max) pairs."""
+    e = np.asarray(edges)
+    return {(int(min(a, b)), int(max(a, b))) for a, b in e}
+
+
+def edge_recall(edges_approx, edges_dense) -> float:
+    """|E_approx ∩ E_dense| / |E_dense| (both are 3n-6 edges)."""
+    ea, ed = edge_set(edges_approx), edge_set(edges_dense)
+    return len(ea & ed) / max(len(ed), 1)
+
+
+def edge_sum_ratio(edge_sum_approx: float, edge_sum_dense: float) -> float:
+    """Total-similarity-captured ratio (≤ ~1; equal at full K)."""
+    return float(edge_sum_approx) / float(edge_sum_dense)
+
+
+def compare_to_dense(X, *, sim_k: int, k: Optional[int] = None,
+                     config: Optional[PipelineConfig] = None
+                     ) -> Dict[str, float]:
+    """Run the topk and dense pipelines on ``X`` and score the approx.
+
+    ``config`` supplies the non-similarity knobs (default: the OPT
+    variant); the dense run uses ``config`` as-is, the approx run its
+    ``.replace(similarity="topk", sim_k=sim_k)``.  Returns a dict with
+    ``ari``, ``edge_recall``, ``edge_sum_ratio`` plus the fallback
+    counters the approx run surfaced in its timings.
+    """
+    base = config if config is not None else PipelineConfig.opt()
+    dense = cluster(X, k=k, config=base, collect_timings=True)
+    approx = cluster(X, k=k,
+                     config=base.replace(similarity="topk", sim_k=sim_k),
+                     collect_timings=True)
+    out = dict(
+        ari=ari(dense.labels, approx.labels),
+        edge_recall=edge_recall(approx.tmfg.edges, dense.tmfg.edges),
+        edge_sum_ratio=edge_sum_ratio(approx.edge_sum, dense.edge_sum),
+    )
+    for key in ("sim_fallbacks", "sim_fallback_rate", "sim_pair_misses"):
+        if key in approx.timings:
+            out[key] = approx.timings[key]
+    return out

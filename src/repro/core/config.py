@@ -46,6 +46,7 @@ _METHODS = ("lazy", "corr", "orig")
 _APSP_METHODS = ("exact", "hub")
 _DBHT_IMPLS = ("device", "host")
 _BACKENDS = ("auto", "pallas", "interpret", "jnp")
+_SIMILARITIES = ("dense", "topk")
 
 
 @dataclass(frozen=True)
@@ -61,6 +62,12 @@ class PipelineConfig:
       apsp_rounds: Bellman-Ford rounds for the hub rows.
       backend:     kernel dispatch — "auto" | "pallas" | "interpret" | "jnp".
       dbht_impl:   DBHT execution strategy — "device" | "host" (§11.4).
+      similarity:  similarity representation (DESIGN.md §13) — "dense"
+                   materializes the (n, n) Pearson matrix; "topk" keeps
+                   only a per-row (n, sim_k) candidate table (the
+                   repro.approx subsystem; staged-only for now).
+      sim_k:       candidate-table width for similarity="topk"
+                   (clamped to n-1 at runtime; must be 0 for "dense").
     """
 
     method: str = "lazy"
@@ -71,6 +78,8 @@ class PipelineConfig:
     apsp_rounds: int = 32
     backend: str = "auto"
     dbht_impl: str = "device"
+    similarity: str = "dense"
+    sim_k: int = 0
 
     def __post_init__(self):
         if self.method not in _METHODS:
@@ -87,6 +96,17 @@ class PipelineConfig:
                              f"have {_BACKENDS}")
         if self.prefix < 1:
             raise ValueError(f"prefix must be >= 1, got {self.prefix}")
+        if self.similarity not in _SIMILARITIES:
+            raise ValueError(f"unknown similarity {self.similarity!r}; "
+                             f"have {_SIMILARITIES}")
+        if self.similarity == "topk" and self.sim_k < 1:
+            raise ValueError(
+                f"similarity='topk' needs sim_k >= 1, got {self.sim_k}; "
+                f"use PipelineConfig.approx(sim_k=...)")
+        if self.similarity == "dense" and self.sim_k != 0:
+            raise ValueError(
+                f"sim_k={self.sim_k} only applies to similarity='topk' "
+                f"(dense ignores it; set sim_k=0)")
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -128,6 +148,24 @@ class PipelineConfig:
                    apsp_method="exact", **overrides)
 
     @classmethod
+    def approx(cls, sim_k: int = 64, **overrides) -> "PipelineConfig":
+        """Sparse-similarity OPT-TDBHT (DESIGN.md §13): the lazy TMFG on
+        an (n, sim_k) candidate table — the (n, n) Pearson matrix is
+        never materialized (`repro.approx`).  Staged-only for now: the
+        fused one-jit path rejects it with a clear error.
+
+        ``overrides`` may replace any OPT default (method, backend,
+        APSP knobs, ...); ``similarity``/``sim_k`` are this
+        constructor's own fields and cannot be overridden."""
+        clash = {"similarity", "sim_k"} & set(overrides)
+        if clash:
+            raise ValueError(f"approx() defines {sorted(clash)}; pass "
+                             f"sim_k= directly or build PipelineConfig(...)")
+        return cls(**{**dict(VARIANTS["opt"]),
+                      **overrides,
+                      "similarity": "topk", "sim_k": sim_k})
+
+    @classmethod
     def resolve(cls, variant: Optional[str] = None,
                 config: Optional["PipelineConfig"] = None,
                 **kwargs) -> "PipelineConfig":
@@ -166,10 +204,14 @@ class PipelineConfig:
         strategy, not semantics — the §11.4 parity contract makes
         device and host results identical, so cached results are shared
         across impls.  Everything else changes the answer (or, for
-        backend, may change float rounding) and must split the cache.
+        backend, may change float rounding) and must split the cache —
+        including the similarity representation (``similarity``/
+        ``sim_k``, DESIGN.md §13): a topk result is a different answer
+        than a dense one at the same window.
         """
         return (self.method, self.prefix, self.topk, self.apsp_method,
-                self.apsp_hubs, self.apsp_rounds, self.backend)
+                self.apsp_hubs, self.apsp_rounds, self.backend,
+                self.similarity, self.sim_k)
 
     def replace(self, **changes) -> "PipelineConfig":
         """A copy with ``changes`` applied (frozen-dataclass update)."""

@@ -53,7 +53,7 @@ import repro.core.apsp as apsp_mod
 import repro.core.dbht as dbht_mod
 import repro.core.jitcache as jitcache
 from .config import PipelineConfig, VARIANTS  # noqa: F401  (re-export)
-from .tmfg import TMFGResult, build_tmfg
+from .tmfg import TMFGResult, adjacency_from_weights, build_tmfg
 
 
 @dataclass
@@ -158,6 +158,13 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
             "run_pipeline_device IS the device program; "
             "config.dbht_impl='host' has no fused form — use "
             "cluster(..., fused=False) for the numpy oracle")
+    if config.similarity != "dense":
+        raise ValueError(
+            "run_pipeline_device has no sparse-similarity form yet: "
+            "similarity='topk' runs staged-only — call cluster()/"
+            "cluster_batch() (they route it to the staged path), or "
+            "fused=False explicitly; DESIGN.md §13 documents the "
+            "limitation")
     arr = jnp.asarray(X_or_S, jnp.float32)
     if batched is None:
         batched = arr.ndim == 3
@@ -252,13 +259,16 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = cfg.dbht_impl == "device" and reuse_tmfg is None
+    can_fuse = (cfg.dbht_impl == "device" and reuse_tmfg is None
+                and cfg.similarity == "dense")
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device' and no reuse_tmfg "
-            "(the staged path is the host/warm-start mode)")
+            "fused=True requires dbht_impl='device', no reuse_tmfg, and "
+            "similarity='dense' (the staged path is the host/warm-start "
+            "mode; the topk similarity path is staged-only for now — "
+            "DESIGN.md §13)")
 
     if fused:
         t0 = time.perf_counter()
@@ -278,22 +288,66 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             host, k=k, timings=timings if collect_timings else None)
 
     # ---- staged path: per-stage jits + syncs (DESIGN.md §12.4) ----------
+    approx = cfg.similarity == "topk"
+    if approx and reuse_tmfg is not None and S is None and moments is None:
+        raise ValueError(
+            "similarity='topk' with reuse_tmfg needs S= or moments=: the "
+            "warm-start splice reruns DBHT on the window's similarities, "
+            "which only exist materialized (DESIGN.md §13)")
     timings = {}
+    table = counters = None
     t0 = time.perf_counter()
     if S is None and moments is not None:
         from repro.stream.window import window_similarity  # no import cycle
         S = jax.block_until_ready(window_similarity(moments))
-    elif S is None:
+    elif S is None and not approx:
         assert X is not None, "need X, S or moments"
         S = similarity_from_timeseries(np.asarray(X), backend=cfg.backend)
         S = jax.block_until_ready(S)
-    else:
+    elif S is not None:
         S = jnp.asarray(S, dtype=jnp.float32)
+    if approx and reuse_tmfg is None:
+        # sparse-similarity stage (DESIGN.md §13.2): an (n, sim_k)
+        # candidate table instead of the (n, n) matrix — cut from S
+        # when one is already materialized (stream windows), else
+        # streamed straight from the series without ever building S
+        from repro.approx import knn as approx_knn  # lazy: no import cycle
+        if S is not None:
+            kk = min(cfg.sim_k, S.shape[0] - 1)
+            table, Zn = approx_knn.topk_from_similarity(S, kk), None
+        else:
+            assert X is not None, "need X, S or moments"
+            X_j = jnp.asarray(np.asarray(X), jnp.float32)
+            kk = min(cfg.sim_k, X_j.shape[0] - 1)
+            table, Zn = approx_knn.topk_pearson_and_z(
+                X_j, kk, backend=cfg.backend)
+        table = jax.block_until_ready(table)
     timings["similarity"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     if reuse_tmfg is not None:
         tm = reuse_tmfg
+    elif approx and cfg.method == "lazy":
+        # the sparse gain scan (DESIGN.md §13.3); the recorded per-edge
+        # weights become the weighted adjacency the DBHT stage gathers
+        # from, so S is never needed downstream either
+        from repro.approx import sparse_tmfg as approx_tmfg
+        tm, w_edges, counters = approx_tmfg.build_tmfg_sparse(
+            table, Xn=Zn, S=S)
+        tm = jax.block_until_ready(tm)
+        if S is None:
+            S = adjacency_from_weights(
+                tm.edges.shape[0] // 3 + 2, tm.edges, w_edges)
+    elif approx:
+        # non-lazy methods scan whole similarity rows per round; they
+        # run on the DENSIFIED sparsification (missing entries floored
+        # below the Pearson range) — exact at sim_k = n-1, O(n²) again
+        # (the lazy method is the memory-saving path; DESIGN.md §13.3)
+        from repro.approx import knn as approx_knn
+        S = approx_knn.densify(table, n=table.indices.shape[0])
+        tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
+                        topk=cfg.topk)
+        tm = jax.block_until_ready(tm)
     else:
         tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
                         topk=cfg.topk)
@@ -304,6 +358,13 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     res = dbht_mod.dbht(S, tm, config=cfg, impl=cfg.dbht_impl)
     timings["dbht+apsp"] = time.perf_counter() - t0
     timings["total"] = sum(timings.values())
+    if approx and collect_timings and counters is not None:
+        # fallback/recall diagnostics of the sparse construction
+        # (DESIGN.md §13.3) ride the timings dict
+        lk, fb = int(counters.lookups), int(counters.fallbacks)
+        timings["sim_fallbacks"] = float(fb)
+        timings["sim_fallback_rate"] = fb / max(lk, 1)
+        timings["sim_pair_misses"] = float(int(counters.pair_misses))
 
     kk = k if k is not None else len(res.converging)
     labels = res.labels(kk)
@@ -366,6 +427,43 @@ def _batched_tmfg(method: str, prefix: int, topk: int, shape=None):
                                  topk=topk))))
 
 
+def _batched_approx_tables(arr, have_S: bool, kk: int, backend: str):
+    """Vmapped candidate-table stage for a batch (DESIGN.md §13.2):
+    (B, n, L) series → per-item (n, kk) tables plus the standardized
+    series (the sparse build's exact-value source), or (B, n, n)
+    similarities → tables alone.  Jitted per (kind, kk, shape) in the
+    shared bounded executable cache, like every staged batch program."""
+    from repro.approx import knn as approx_knn  # lazy: no import cycle
+
+    if have_S:
+        fn = jitcache.cached(
+            ("approx_topk_s", kk, arr.shape),
+            lambda: jax.jit(jax.vmap(
+                lambda s: approx_knn._topk_from_similarity(s, kk))))
+        v, i = fn(arr)
+        return approx_knn.TopKTable(values=v, indices=i), None
+
+    fn = jitcache.cached(
+        ("approx_topk_x", kk, backend, arr.shape),
+        lambda: jax.jit(jax.vmap(
+            lambda x: approx_knn._topk_and_z(x, kk, backend, 128, 128))))
+    v, i, zn = fn(arr)
+    return approx_knn.TopKTable(values=v, indices=i), zn
+
+
+def _batched_sparse_tmfg(from_x: bool, table, src):
+    """Vmapped sparse lazy TMFG (DESIGN.md §13.3), jitted per
+    (source kind, shapes) in the shared bounded executable cache."""
+    from repro.approx import sparse_tmfg as approx_tmfg
+
+    fn = jitcache.cached(
+        ("approx_tmfg", from_x, table.indices.shape, src.shape),
+        lambda: jax.jit(jax.vmap(
+            lambda tv, ti, s: approx_tmfg.sparse_lazy_tmfg(
+                tv, ti, s, from_x=from_x))))
+    return fn(table.values, table.indices, jnp.asarray(src, jnp.float32))
+
+
 def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
                   config: Optional[PipelineConfig] = None,
                   method: Optional[str] = None, prefix: Optional[int] = None,
@@ -406,11 +504,14 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = cfg.dbht_impl == "device"
+    can_fuse = cfg.dbht_impl == "device" and cfg.similarity == "dense"
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
-        raise ValueError("fused=True requires dbht_impl='device'")
+        raise ValueError(
+            "fused=True requires dbht_impl='device' and "
+            "similarity='dense' (the topk path is staged-only for now — "
+            "DESIGN.md §13)")
 
     timings: Dict[str, float] = {}
     t_start = time.perf_counter()
@@ -450,16 +551,52 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
             timings=timings if collect_timings else {})
 
     # ---- staged path (DESIGN.md §12.4) ----------------------------------
+    approx = cfg.similarity == "topk"
     t0 = time.perf_counter()
-    if have_S:
+    table_b = src_b = None
+    if approx:
+        kk = min(cfg.sim_k, arr.shape[1] - 1)
+        table_b, src_b = _batched_approx_tables(arr, have_S, kk,
+                                                cfg.backend)
+        table_b = jax.block_until_ready(table_b)
+        S_b = arr if have_S else None
+    elif have_S:
         S_b = arr
     else:
         S_b = jax.block_until_ready(_batched_similarity(arr, cfg.backend))
     timings["similarity"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    tm_b = jax.block_until_ready(
-        _batched_tmfg(cfg.method, cfg.prefix, cfg.topk, S_b.shape)(S_b))
+    counters_b = None
+    if approx and cfg.method == "lazy":
+        # vmapped sparse gain scan (DESIGN.md §13.3); when built from X
+        # the per-edge weights scatter into the weighted adjacency so
+        # the batch never materializes a (B, n, n) similarity
+        tm_b, w_b, counters_b = _batched_sparse_tmfg(
+            not have_S, table_b, S_b if have_S else src_b)
+        tm_b = jax.block_until_ready(tm_b)
+        if S_b is None:
+            n = arr.shape[1]
+            adj = jitcache.cached(
+                ("approx_adj", tm_b.edges.shape),
+                lambda: jax.jit(jax.vmap(
+                    lambda e, w: adjacency_from_weights(n, e, w))))
+            S_b = adj(tm_b.edges, w_b)
+    elif approx:
+        from repro.approx import knn as approx_knn  # lazy: no import cycle
+        n = arr.shape[1]
+        dense = jitcache.cached(
+            ("approx_densify", table_b.indices.shape),
+            lambda: jax.jit(jax.vmap(
+                lambda v, i: approx_knn._densify(v, i, n))))
+        S_b = dense(table_b.values, table_b.indices)
+        tm_b = jax.block_until_ready(
+            _batched_tmfg(cfg.method, cfg.prefix, cfg.topk,
+                          S_b.shape)(S_b))
+    else:
+        tm_b = jax.block_until_ready(
+            _batched_tmfg(cfg.method, cfg.prefix, cfg.topk,
+                          S_b.shape)(S_b))
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -498,6 +635,15 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
             timings=per if collect_timings else {}))
     timings["dbht+apsp"] = time.perf_counter() - t0
     timings["total"] = sum(timings.values())
+    if approx and collect_timings and counters_b is not None:
+        # batch-summed fallback/recall diagnostics (DESIGN.md §13.3);
+        # added after "total" so they never count as wall time
+        fb = float(np.sum(np.asarray(counters_b.fallbacks)))
+        timings["sim_fallbacks"] = fb
+        timings["sim_fallback_rate"] = fb / max(
+            float(np.sum(np.asarray(counters_b.lookups))), 1.0)
+        timings["sim_pair_misses"] = float(np.sum(
+            np.asarray(counters_b.pair_misses)))
 
     return BatchClusterResult(
         labels=np.stack([r.labels for r in results]), results=results,

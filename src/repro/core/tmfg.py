@@ -404,8 +404,20 @@ def build_tmfg(S: jax.Array, *, method: str = "lazy", prefix: int = 10,
 @functools.partial(jax.jit, static_argnums=0)
 def tmfg_adjacency(n: int, edges: jax.Array, S: jax.Array) -> jax.Array:
     """Dense weighted adjacency (0 where no edge) from a TMFG edge list."""
-    A = jnp.zeros((n, n), S.dtype)
-    w = S[edges[:, 0], edges[:, 1]]
+    return adjacency_from_weights(n, edges, S[edges[:, 0], edges[:, 1]])
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def adjacency_from_weights(n: int, edges: jax.Array,
+                           w: jax.Array) -> jax.Array:
+    """Dense weighted adjacency from per-edge weights (3n-6,).
+
+    The sparse-similarity path (DESIGN.md §13.3) records each edge's
+    similarity at insertion time, so downstream stages that gather S
+    only at TMFG edges — ``apsp.edge_lengths``, the DBHT edge
+    directions — can run on this scatter instead of the (n, n)
+    similarity matrix, with bitwise-identical gathered values."""
+    A = jnp.zeros((n, n), w.dtype)
     A = A.at[edges[:, 0], edges[:, 1]].set(w)
     A = A.at[edges[:, 1], edges[:, 0]].set(w)
     return A

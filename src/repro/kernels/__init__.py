@@ -4,6 +4,8 @@
   * pearson.py   -- fused correlation-matrix construction (pipeline input)
   * gainscan.py  -- batched masked row argmax (the vectorized MaxCorrs scan,
                     TPU analogue of the paper's AVX2/512 optimization)
+  * topk.py      -- streaming blocked top-K Pearson: per-row candidate
+                    tables in O(n*K) memory (repro.approx, DESIGN.md §13.2)
   * flash_attention.py -- block-wise attention for the LM architecture zoo
 
 Each kernel ships with a pure-jnp oracle in ref.py and a dispatching

@@ -20,6 +20,7 @@ from . import ref
 from .gainscan import masked_argmax_pallas
 from .minplus import minplus_jnp, minplus_pallas
 from .pearson import pearson_pallas
+from .topk import topk_pearson_jnp, topk_pearson_pallas
 
 
 def _resolve(backend: str) -> str:
@@ -59,3 +60,18 @@ def masked_argmax(S: jax.Array, mask: jax.Array, *, backend: str = "auto",
     if b == "interpret":
         return masked_argmax_pallas(S, mask, bm=bm, bn=bn, interpret=True)
     return ref.masked_argmax_ref(S, mask)
+
+
+def topk(X: jax.Array, k: int, *, backend: str = "auto", bm: int = 128,
+         bn: int = 128):
+    """Top-k Pearson candidates per row of X (n, L), diagonal excluded.
+
+    Returns (values (n, k) f32, indices (n, k) i32) in ``lax.top_k``
+    order (value desc, index asc) — computed BLOCKED, so the (n, n)
+    similarity matrix is never materialized (DESIGN.md §13.2)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return topk_pearson_pallas(X, k, bm=bm, bn=bn)
+    if b == "interpret":
+        return topk_pearson_pallas(X, k, bm=bm, bn=bn, interpret=True)
+    return topk_pearson_jnp(X, k, bm=bm)

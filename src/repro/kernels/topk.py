@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: streaming blocked top-K Pearson (DESIGN.md §13.2).
+
+The similarity stage of every pipeline path used to materialize the
+full ``(n, n)`` Pearson matrix even though TMFG construction only ever
+consumes a per-row candidate list.  This kernel computes, for each row
+of ``X (n, L)``, the K highest-correlation partner rows — values and
+indices — WITHOUT ever holding an ``(n, n)`` buffer: it walks
+``(bm, n)`` row-panels of the correlation matrix one ``(bm, bn)``
+column tile at a time, keeping a running ``(bm, K)`` top-K in VMEM, so
+peak memory is ``O(n·K + n·L)`` instead of ``O(n²)``.
+
+Tie semantics match ``jax.lax.top_k`` on the dense matrix exactly:
+values descending, equal values ordered by ascending column index.
+The diagonal (self-correlation) is excluded.  The jnp fallback
+computes each ``(bm, n)`` row-panel with the same
+``standardize → clip(Z @ Z.T)`` arithmetic as ``ref.pearson_ref``, so
+at ``K = n-1`` the candidate table holds bit-identical values to the
+dense similarity matrix's rows (the exactness contract
+tests/test_approx.py pins end to end).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import standardize_rows
+
+NEG = -3.4e38  # finite -inf stand-in (kernel-internal; Pearson ∈ [-1, 1])
+
+
+def _merge_topk(run_v, run_i, cand_v, cand_i, k: int):
+    """Merge candidate (value, index) pairs into a running top-K.
+
+    ``run_v/run_i`` are (bm, K); ``cand_v/cand_i`` are (bm, C).  Selects
+    the K best of the K+C pairs per row by (value desc, index asc) with
+    K iterative max-extractions — no sort primitive, so the same body
+    runs under Mosaic, interpret mode, and plain XLA.
+    """
+    vals = jnp.concatenate([run_v, cand_v], axis=1)          # (bm, K+C)
+    idxs = jnp.concatenate([run_i, cand_i], axis=1)
+    big_i = jnp.int32(2 ** 30)
+
+    def step(s, carry):
+        vals, idxs, out_v, out_i = carry
+        best_v = jnp.max(vals, axis=1, keepdims=True)                 # (bm, 1)
+        at_best = vals == best_v
+        best_i = jnp.min(jnp.where(at_best, idxs, big_i), axis=1,
+                         keepdims=True)                               # (bm, 1)
+        out_v = lax.dynamic_update_slice(out_v, best_v, (0, s))
+        out_i = lax.dynamic_update_slice(out_i, best_i, (0, s))
+        taken = at_best & (idxs == best_i)
+        vals = jnp.where(taken, NEG, vals)
+        idxs = jnp.where(taken, big_i, idxs)
+        return vals, idxs, out_v, out_i
+
+    bm = vals.shape[0]
+    out_v = jnp.full((bm, k), NEG, vals.dtype)
+    out_i = jnp.full((bm, k), big_i, jnp.int32)
+    _, _, out_v, out_i = lax.fori_loop(
+        0, k, lambda s, c: step(s, c), (vals, idxs, out_v, out_i))
+    return out_v, out_i
+
+
+def _topk_kernel(zrow_ref, zcol_ref, val_ref, idx_ref, *, bn: int, k: int,
+                 n: int):
+    """Grid (i, j): stream column tiles j through row panel i's top-K.
+
+    The output blocks (bm, K) are revisited for every j — they ARE the
+    running top-K state (the gainscan kernel's running-argmax idiom,
+    widened from 1 to K slots)."""
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, NEG)
+        idx_ref[...] = jnp.full_like(idx_ref, jnp.int32(2 ** 30))
+
+    z = zrow_ref[...]                                        # (bm, L)
+    w = zcol_ref[...]                                        # (bn, L)
+    s = jnp.dot(z, w.T, preferred_element_type=jnp.float32)  # (bm, bn)
+    s = jnp.clip(s, -1.0, 1.0)
+    bm = s.shape[0]
+    rows = i * bm + lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    s = jnp.where((rows == cols) | (cols >= n), NEG, s)      # no self, no pad
+    v, ix = _merge_topk(val_ref[...], idx_ref[...], s, cols, k)
+    val_ref[...] = v
+    idx_ref[...] = ix
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bm", "bn", "interpret"))
+def topk_pearson_pallas(X: jax.Array, k: int, *, bm: int = 128,
+                        bn: int = 128, interpret: bool = False):
+    """Top-K Pearson candidates of each row of X via the streaming kernel.
+
+    Returns ``(values (n, k) f32, indices (n, k) i32)``, sorted by
+    (value desc, index asc) per row — ``lax.top_k`` order.  Unlike the
+    dense pearson kernel the standardized ``Z (n, L)`` IS materialized
+    (it is only O(n·L)); what is never materialized is the (n, n)
+    similarity matrix.
+    """
+    n, L = X.shape
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"need 1 <= k <= n-1, got k={k} for n={n}")
+    Z = standardize_rows(X)
+    bm_, bn_ = min(bm, n), min(bn, n)
+    # pad to a common multiple of BOTH block sizes: a max() pad would
+    # under-cover the grid whenever the other block size does not
+    # divide it (trailing rows uninitialized / columns never scanned)
+    pad = (-n) % math.lcm(bm_, bn_)
+    Zp = jnp.pad(Z, ((0, pad), (0, 0)))                      # zero rows: s=0,
+    N = n + pad                                              # masked by col>=n
+
+    val, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, bn=bn_, k=k, n=n),
+        grid=(N // bm_, N // bn_),
+        in_specs=[
+            pl.BlockSpec((bm_, L), lambda i, j: (i, 0)),     # row panel
+            pl.BlockSpec((bn_, L), lambda i, j: (j, 0)),     # column tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, k), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Zp, Zp)
+    return val[:n], idx[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm"))
+def topk_pearson_jnp(X: jax.Array, k: int, *, bm: int = 128):
+    """Blocked top-K Pearson, pure XLA (the CPU production path).
+
+    Scans ``(bm, n)`` row-panels — ``clip(Z[panel] @ Z.T)``, exactly
+    ``ref.pearson_ref``'s arithmetic, which XLA computes bit-identically
+    to the corresponding rows of the full matmul — and reduces each to
+    its per-row ``lax.top_k``.  Peak live memory is the panel plus the
+    (n, k) outputs; the (n, n) matrix never exists (the jaxpr shape
+    check in tests/test_approx.py pins this).
+    """
+    n, L = X.shape
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"need 1 <= k <= n-1, got k={k} for n={n}")
+    Z = standardize_rows(X)
+    bm_ = min(bm, n)
+    pad = (-n) % bm_
+    Zp = jnp.pad(Z, ((0, pad), (0, 0)))
+
+    def panel(_, i0):
+        rows = lax.dynamic_slice(Zp, (i0, 0), (bm_, L))
+        s = jnp.clip(rows @ Z.T, -1.0, 1.0)                  # (bm, n)
+        r = i0 + jnp.arange(bm_, dtype=jnp.int32)
+        s = jnp.where(r[:, None] == jnp.arange(n)[None, :], -jnp.inf, s)
+        v, ix = lax.top_k(s, k)
+        return None, (v, ix.astype(jnp.int32))
+
+    starts = jnp.arange(0, n + pad, bm_, dtype=jnp.int32)
+    _, (v, ix) = lax.scan(panel, None, starts)
+    return v.reshape(-1, k)[:n], ix.reshape(-1, k)[:n]

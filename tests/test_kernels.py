@@ -3,12 +3,14 @@
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.gainscan import masked_argmax_pallas
 from repro.kernels.minplus import minplus_jnp, minplus_pallas
 from repro.kernels.pearson import pearson_pallas
+from repro.kernels.topk import topk_pearson_jnp, topk_pearson_pallas
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -93,6 +95,9 @@ def test_masked_argmax(m, n, mask_frac):
 
 
 def test_ops_dispatch():
+    """The backend matrix the ops.py docstring promises: every public
+    kernel wrapper — minplus, pearson, masked_argmax AND topk — runs
+    under both the jnp fallback and pallas interpret mode."""
     A = jnp.asarray(RNG.uniform(0, 3, (9, 9)).astype(np.float32))
     for backend in ("jnp", "interpret"):
         out = ops.minplus(A, A, backend=backend)
@@ -101,6 +106,79 @@ def test_ops_dispatch():
         assert S.shape == (9, 9)
         v, i = ops.masked_argmax(A, jnp.zeros(9, bool), backend=backend)
         assert v.shape == (9,)
+        tv, ti = ops.topk(A, 4, backend=backend, bm=4, bn=4)
+        assert tv.shape == (9, 4) and ti.shape == (9, 4)
+        want_v, want_i = jax.lax.top_k(
+            jnp.where(jnp.eye(9, dtype=bool), -jnp.inf,
+                      ref.pearson_ref(A)), 4)
+        np.testing.assert_array_equal(ti, want_i)
+        np.testing.assert_allclose(tv, want_v, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming top-K pearson (DESIGN.md §13.2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,L,k", [(16, 24, 5), (45, 70, 44), (64, 33, 17),
+                                   (33, 500, 8)])
+def test_topk_streaming_vs_dense(n, L, k):
+    """Both backends reproduce lax.top_k of the dense matrix: indices
+    exactly (including the value-desc/index-asc tie order), values to
+    kernel tolerance (the jnp path is bitwise — pinned in
+    tests/test_approx.py)."""
+    X = RNG.normal(size=(n, L)).astype(np.float32)
+    Sd = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf,
+                   ref.pearson_ref(jnp.asarray(X)))
+    want_v, want_i = jax.lax.top_k(Sd, k)
+    got_jv, got_ji = topk_pearson_jnp(jnp.asarray(X), k, bm=16)
+    got_pv, got_pi = topk_pearson_pallas(jnp.asarray(X), k, bm=16, bn=16,
+                                         interpret=True)
+    np.testing.assert_array_equal(got_ji, want_i)
+    np.testing.assert_array_equal(got_pi, want_i)
+    np.testing.assert_allclose(got_jv, want_v, atol=2e-6)
+    np.testing.assert_allclose(got_pv, want_v, atol=2e-6)
+
+
+def test_topk_tie_order_is_stable():
+    """Duplicated rows create exact value ties; the table must order
+    them by ascending index, matching lax.top_k."""
+    X = RNG.normal(size=(6, 20)).astype(np.float32)
+    X = np.concatenate([X, X, X], axis=0)              # 18 rows, triplicated
+    n = X.shape[0]
+    Sd = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf,
+                   ref.pearson_ref(jnp.asarray(X)))
+    want_v, want_i = jax.lax.top_k(Sd, n - 1)
+    got_v, got_i = topk_pearson_jnp(jnp.asarray(X), n - 1, bm=8)
+    pal_v, pal_i = topk_pearson_pallas(jnp.asarray(X), n - 1, bm=8, bn=8,
+                                       interpret=True)
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(pal_i, want_i)
+
+
+def test_topk_mismatched_block_sizes_cover_full_grid():
+    """Regression (review): bm != bn with a pad computed from only one
+    of them under-covered the grid — trailing rows came back as
+    uninitialized garbage, or trailing columns were silently never
+    scanned.  The pad must reach a common multiple of both."""
+    n, L, k = 16, 20, 4
+    X = RNG.normal(size=(n, L)).astype(np.float32)
+    Sd = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf,
+                   ref.pearson_ref(jnp.asarray(X)))
+    want_v, want_i = jax.lax.top_k(Sd, k)
+    for bm, bn in [(6, 16), (16, 6), (5, 7), (7, 16)]:
+        got_v, got_i = topk_pearson_pallas(jnp.asarray(X), k, bm=bm, bn=bn,
+                                           interpret=True)
+        np.testing.assert_array_equal(got_i, want_i, err_msg=f"{bm}x{bn}")
+        np.testing.assert_allclose(got_v, want_v, atol=2e-6,
+                                   err_msg=f"{bm}x{bn}")
+
+
+def test_topk_rejects_bad_k():
+    X = jnp.asarray(RNG.normal(size=(8, 10)).astype(np.float32))
+    with pytest.raises(ValueError, match="k"):
+        topk_pearson_jnp(X, 8)                          # k > n-1
+    with pytest.raises(ValueError, match="k"):
+        topk_pearson_pallas(X, 0, interpret=True)
 
 
 if HAVE_HYP:
