@@ -20,8 +20,6 @@ agreement, edge recall, edge-sum ratio) of ``sim_k=64`` via the
 
 from __future__ import annotations
 
-import gc
-
 import numpy as np
 
 import jax
@@ -29,28 +27,11 @@ import jax
 from repro.approx import knn, project, quality
 from repro.data.timeseries import make_dataset
 from repro.kernels import ops
-from .common import emit, timeit
+from .common import emit, stage_cost as _stage, timeit
 
 SIM_K = 64
 SKETCH_DIM = 32
 POOL = 128
-
-
-def _live_bytes() -> int:
-    gc.collect()
-    return sum(int(a.nbytes) for a in jax.live_arrays())
-
-
-def _stage(fn):
-    """(best wall time, live bytes the stage's outputs keep alive)."""
-    out = jax.block_until_ready(fn())      # warm: compile outside timing
-    t = timeit(lambda: jax.block_until_ready(fn()), repeats=3)
-    del out                                # drop the warm outputs first
-    before = _live_bytes()
-    out = jax.block_until_ready(fn())
-    held = _live_bytes() - before
-    del out
-    return t, max(held, 0)
 
 
 def run(scale: float = 1.0):
@@ -84,9 +65,9 @@ def run(scale: float = 1.0):
             bytes_dense=b_dense, bytes_topk=b_topk,
         ))
 
-    # end-to-end quality at modest n (the full pipeline still carries
-    # dense (n, n) APSP matrices — DESIGN.md §13.5 — so e2e scaling
-    # rows stay CPU-sized here)
+    # end-to-end quality at modest n (the e2e memory-scaling rows —
+    # the sparse APSP+DBHT tail that removed the §13.5 dense boundary —
+    # live in bench_sparse_apsp, DESIGN.md §14)
     n = max(24, int(round(240 * scale)))
     X = make_dataset(n, 64, 4, noise=0.6, seed=1)[0]
     rep = quality.compare_to_dense(X, sim_k=min(SIM_K, n - 1), k=4)

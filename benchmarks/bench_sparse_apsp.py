@@ -1,0 +1,200 @@
+"""Sparse APSP + DBHT tail scaling (DESIGN.md §14): the O(n·h) factor
+vs the dense (n, n) programs, per n.
+
+Three question blocks:
+
+  * n-scaling — wall time and live bytes of the sparse hub
+    factorization (``hub_factor_sparse`` over the CSR of the 3n-6
+    edges) against the dense ``apsp_hub`` / ``apsp_exact`` programs on
+    the same graph.  The acceptance bar (ISSUE 6): at n ≥ 256 the
+    sparse factor's live bytes are STRICTLY below the dense baseline's
+    — asserted, so a regression fails ``run.py --strict``.
+  * an end-to-end sparse-tail row — ``cluster`` with
+    ``apsp_method="sparse"`` (staged, never (n, n)) against the dense
+    staged pipeline at the same n.
+  * the large-n attempt — the full sparse tail (factor + panel sweep +
+    nested HAC) at the largest n a fixed time budget allows, starting
+    from 50k·scale and halving; rows record n reached, wall time, and
+    the ``jax.live_arrays`` bytes while the factor is resident.
+
+TMFG topologies for the scaling rows are SYNTHESIZED combinatorially
+(random face insertion — the construction's exact invariants, O(n)
+host work) so the rows measure the tail, not an O(n²·rounds) build.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from types import SimpleNamespace
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.apsp as A
+from repro.core import sparse_dbht
+from repro.core.config import PipelineConfig
+from repro.core.pipeline import cluster
+from repro.kernels.sparse_apsp import csr_from_edges
+from .common import emit, live_bytes, stage_cost, timeit
+
+LARGE_N_BASE = 50_000
+LARGE_N_BUDGET_S = 120.0
+LARGE_N_HUBS = 16
+STRICT_MIN_N = 256
+
+
+def synth_tmfg(n: int, seed: int = 0):
+    """A random TMFG *topology* with uniform edge similarities: start
+    from K4, insert each vertex into a random face (3 new edges, the
+    face splits in three) — the exact invariants of the real builder
+    (3n-6 edges, 2n-4 faces, n-3 bubbles) in O(n) host work."""
+    rng = np.random.default_rng(seed)
+    edges = [(a, b) for a in range(4) for b in range(a + 1, 4)]
+    faces = [(0, 1, 2), (0, 1, 3), (0, 2, 3), (1, 2, 3)]
+    face_bubble = [0, 0, 0, 0]
+    bubble_verts = [(0, 1, 2, 3)]
+    bubble_tri = [(0, 1, 2)]          # root's tri is unused (b >= 1 only)
+    bubble_parent = [-1]
+    home_bubble = np.zeros(n, np.int64)
+    for v in range(4, n):
+        fi = int(rng.integers(len(faces)))
+        a, b, c = faces[fi]
+        p = face_bubble[fi]
+        edges += [(a, v), (b, v), (c, v)]
+        nb = len(bubble_verts)
+        bubble_verts.append((a, b, c, v))
+        bubble_tri.append((a, b, c))
+        bubble_parent.append(p)
+        home_bubble[v] = nb
+        faces[fi] = (a, b, v)
+        face_bubble[fi] = nb
+        faces += [(a, c, v), (b, c, v)]
+        face_bubble += [nb, nb]
+    w_sim = rng.uniform(0.05, 0.95, len(edges)).astype(np.float32)
+    return SimpleNamespace(
+        edges=np.asarray(edges, np.int64),
+        bubble_verts=np.asarray(bubble_verts, np.int64),
+        bubble_tri=np.asarray(bubble_tri, np.int64),
+        bubble_parent=np.asarray(bubble_parent, np.int64),
+        home_bubble=home_bubble), w_sim
+
+
+def _dense_lengths(n, edges, w_sim):
+    W = np.full((n, n), np.inf, np.float32)
+    w = np.sqrt(np.maximum(2.0 * (1.0 - np.clip(w_sim, -1, 1)), 0.0))
+    W[edges[:, 0], edges[:, 1]] = W[edges[:, 1], edges[:, 0]] = w
+    np.fill_diagonal(W, 0.0)
+    return W
+
+
+def run(scale: float = 1.0):
+    rows = []
+    for n_base in (500, 1000, 2000):
+        n = max(16, int(round(n_base * scale)))
+        tm, w_sim = synth_tmfg(n, seed=n_base)
+        edges = tm.edges
+        w_len = np.sqrt(np.maximum(
+            2.0 * (1.0 - np.clip(w_sim, -1, 1)), 0.0)).astype(np.float32)
+        graph = csr_from_edges(n, jnp.asarray(edges), jnp.asarray(w_len))
+        graph = jax.block_until_ready(graph)
+
+        t_sparse, b_sparse = stage_cost(
+            lambda: A.hub_factor_sparse(graph)[1])
+        W = jnp.asarray(_dense_lengths(n, edges, w_sim))
+        t_hub, b_hub = stage_cost(lambda: A.apsp_hub(W))
+        t_exact, _ = stage_cost(lambda: A.apsp_exact(W))
+        b_dense = b_hub + int(W.nbytes)        # estimate + its W operand
+
+        if n >= STRICT_MIN_N:
+            # the ISSUE 6 acceptance bar: the factor must hold strictly
+            # less live memory than the dense tail's (n, n) baseline
+            assert b_sparse < b_dense, (
+                f"sparse APSP factor must hold strictly less live "
+                f"memory than dense at n={n}: {b_sparse} >= {b_dense}")
+        rows.append(dict(
+            name=f"sparse_apsp/factor/n{n}",
+            us_per_call=f"{t_sparse * 1e6:.0f}",
+            derived=f"mem_dense_over_sparse="
+                    f"{b_dense / max(b_sparse, 1):.1f}x",
+            t_sparse=f"{t_sparse:.4f}", t_hub=f"{t_hub:.4f}",
+            t_exact=f"{t_exact:.4f}",
+            bytes_sparse=b_sparse, bytes_dense=b_dense,
+        ))
+
+    # end-to-end: the staged sparse tail vs the dense staged pipeline
+    n = max(24, int(round(500 * scale)))
+    tm, w_sim = synth_tmfg(n, seed=7)
+    S = sparse_dbht.tmfg_adj_sim(n, tm.edges, w_sim)
+    t_e2e_sparse = timeit(lambda: cluster(
+        S=S, config=PipelineConfig(apsp_method="sparse", topk=0)),
+        repeats=2, warmup=1)
+    t_e2e_dense = timeit(lambda: cluster(
+        S=S, config=PipelineConfig(topk=0), fused=False),
+        repeats=2, warmup=1)
+    rows.append(dict(
+        name=f"sparse_apsp/e2e/n{n}",
+        us_per_call=f"{t_e2e_sparse * 1e6:.0f}",
+        derived=f"dense_over_sparse="
+                f"{t_e2e_dense / max(t_e2e_sparse, 1e-9):.2f}x",
+        t_sparse=f"{t_e2e_sparse:.4f}", t_hub=f"{t_e2e_dense:.4f}",
+    ))
+
+    # the large-n attempt: full sparse tail, time-boxed, halving from
+    # 50k·scale down to whatever fits the budget
+    n_try = max(64, int(round(LARGE_N_BASE * scale)))
+    while True:
+        tm, w_sim = synth_tmfg(n_try, seed=1)
+        graph = jax.block_until_ready(csr_from_edges(
+            n_try, jnp.asarray(tm.edges),
+            jnp.asarray(np.sqrt(np.maximum(
+                2.0 * (1.0 - np.clip(w_sim, -1, 1)), 0.0)), jnp.float32)))
+        t0 = time.perf_counter()
+        _, D_h = jax.block_until_ready(
+            A.hub_factor_sparse(graph, n_hubs=LARGE_N_HUBS))
+        t_factor = time.perf_counter() - t0
+        b_factor = live_bytes()
+        # probe one warm panel; project the sweep
+        bm = min(sparse_dbht.PANEL_ROWS, n_try)
+        B = tm.bubble_parent.shape[0]
+        fn = sparse_dbht._panel_fn(LARGE_N_HUBS, n_try, bm, B, 1)
+        args = (D_h, graph.rows, graph.cols, graph.vals,
+                jnp.asarray(tm.bubble_verts),
+                jnp.zeros((B,), jnp.int32), jnp.zeros((n_try,), jnp.int32))
+        jax.block_until_ready(fn(*args, 0))                # compile
+        t_panel = timeit(
+            lambda: jax.block_until_ready(fn(*args, 0)), repeats=1)
+        projected = t_factor + t_panel * math.ceil(n_try / bm) * 2.0
+        if projected <= LARGE_N_BUDGET_S or n_try <= 1024:
+            t0 = time.perf_counter()
+            res = sparse_dbht.dbht_sparse(
+                None, tm, edge_weights=w_sim, n_hubs=LARGE_N_HUBS,
+                hac_max=1024)
+            t_total = time.perf_counter() - t0
+            rows.append(dict(
+                name=f"sparse_apsp/large-n/n{n_try}",
+                us_per_call=f"{t_total * 1e6:.0f}",
+                derived=f"live_factor_bytes={b_factor}",
+                t_sparse=f"{t_total:.2f}",
+                bytes_sparse=b_factor,
+                n_reached=n_try,
+                linkage_rows=res.linkage.shape[0],
+            ))
+            break
+        rows.append(dict(
+            name=f"sparse_apsp/large-n/n{n_try}",
+            us_per_call="",
+            derived=f"SKIPPED:projected={projected:.0f}s"
+                    f">{LARGE_N_BUDGET_S:.0f}s",
+        ))
+        n_try //= 2
+
+    return emit(rows, ["name", "us_per_call", "derived", "t_sparse",
+                       "t_hub", "t_exact", "bytes_sparse", "bytes_dense",
+                       "n_reached", "linkage_rows"])
+
+
+if __name__ == "__main__":
+    run()

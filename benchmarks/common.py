@@ -7,6 +7,7 @@ edge-sum ratios) that are scale-free, alongside raw wall times.
 
 from __future__ import annotations
 
+import gc
 import time
 from typing import Callable, Dict, List
 
@@ -44,6 +45,28 @@ def timeit(fn: Callable, *, repeats: int = 1, warmup: int = 0) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def live_bytes() -> int:
+    """Total bytes held by live device arrays (the §13/§14 memory rows)."""
+    import jax
+
+    gc.collect()
+    return sum(int(a.nbytes) for a in jax.live_arrays())
+
+
+def stage_cost(fn):
+    """(best wall time, live bytes the stage's outputs keep alive)."""
+    import jax
+
+    out = jax.block_until_ready(fn())      # warm: compile outside timing
+    t = timeit(lambda: jax.block_until_ready(fn()), repeats=3)
+    del out                                # drop the warm outputs first
+    before = live_bytes()
+    out = jax.block_until_ready(fn())
+    held = live_bytes() - before
+    del out
+    return t, max(held, 0)
 
 
 def emit(rows: List[Dict], header: List[str]):

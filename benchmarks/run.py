@@ -11,6 +11,7 @@ columns).  Sections:
   fig6  ARI per variant                (bench_ari)
   fig7  edge-sum reduction             (bench_edgesum)
   apsp  exact vs hub APSP              (bench_apsp)
+  sparse  sparse APSP factor + DBHT tail scaling (bench_sparse_apsp)
   stream  streaming window + service   (bench_stream)
   pipeline  fused vs staged latency    (bench_pipeline)
   approx  dense vs top-K similarity    (bench_approx)
@@ -29,8 +30,8 @@ import sys
 import time
 
 from . import (bench_approx, bench_apsp, bench_ari, bench_breakdown,
-               bench_edgesum, bench_pipeline, bench_speedup, bench_stream,
-               bench_tmfg, roofline)
+               bench_edgesum, bench_pipeline, bench_sparse_apsp,
+               bench_speedup, bench_stream, bench_tmfg, roofline)
 
 SECTIONS = {
     "fig2": lambda scale: bench_tmfg.run(scale),
@@ -39,6 +40,7 @@ SECTIONS = {
     "fig6": lambda scale: bench_ari.run(scale),
     "fig7": lambda scale: bench_edgesum.run(scale),
     "apsp": lambda scale: bench_apsp.run(scale),
+    "sparse": lambda scale: bench_sparse_apsp.run(scale),
     "stream": lambda scale: bench_stream.run(scale),
     "pipeline": lambda scale: bench_pipeline.run(scale),
     "approx": lambda scale: bench_approx.run(scale),

@@ -17,6 +17,19 @@ default).  The approximation is an upper bound on the true distance, exact
 for any pair whose shortest path passes a hub (TMFG's early-inserted
 vertices are high-degree hubs, so in practice most paths do — measured in
 benchmarks/bench_apsp.py).
+
+A third variant (DESIGN.md §14) drops the dense matrix entirely:
+
+  * sparse:  the same hub selection + Bellman-Ford rounds, but run as
+             multi-source relaxation over the CSR adjacency of the
+             3n-6 TMFG edges (``kernels/sparse_apsp.py``) — O(h·n)
+             memory for the hub factor ``D_h`` instead of O(n²).
+             :func:`hub_factor_sparse` returns the factor; the
+             distance of any pair is ``min_h D_h[h,u] + D_h[h,v]``
+             (floored by the direct edge, if one exists).
+             :func:`apsp_sparse` densifies the factor back to (n, n)
+             as a parity/interop surface — the sparse DBHT tail
+             (core/sparse_dbht.py) consumes the factor directly.
 """
 
 from __future__ import annotations
@@ -26,10 +39,33 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
+from repro.kernels import sparse_apsp as sparse_kernels
 
 INF = jnp.inf
+
+# Below this size ``apsp(method="hub")`` silently runs the exact program
+# instead.  BENCH_5.json showed hub LOSING at every small n (speedup
+# 0.15-0.87): the hub program — top_k + a 32-round scan of three kernel
+# shapes — costs ~2.5x more to compile and dispatch than exact's
+# ceil(log2(n-1)) squarings of one shape, and below ~200 vertices that
+# overhead dominates the O(n³) work it saves.  Measured first-call
+# (compile-inclusive) exact/hub ratios on this container: 0.42 @ n=48,
+# 0.39 @ 96, 0.91 @ 192, 1.22 @ 256, 4.50 @ 512 — crossover between 192
+# and 256.  Exact results are also strictly more accurate, so the
+# fallback only ever improves answers (pinned in tests/test_sparse_apsp.py;
+# n-scaling rows in benchmarks/bench_apsp.py).
+HUB_MIN_N = 200
+
+
+def hub_count(n: int, n_hubs: int = 0) -> int:
+    """Number of hub sources: ``n_hubs`` or the paper's ceil(sqrt(n)) default
+    (floored at 4), clamped to n.  Shared by the dense and sparse paths so
+    ``apsp_hub`` and :func:`hub_factor_sparse` pick identical hub sets."""
+    h = n_hubs if n_hubs > 0 else max(4, math.ceil(math.sqrt(n)))
+    return min(h, n)
 
 
 def edge_lengths(n: int, edges: jax.Array, S: jax.Array) -> jax.Array:
@@ -75,8 +111,7 @@ def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
         no-ops on already-converged rows (min is idempotent).
     """
     n = W.shape[0]
-    h = n_hubs if n_hubs > 0 else max(4, math.ceil(math.sqrt(n)))
-    h = min(h, n)
+    h = hub_count(n, n_hubs)
 
     # hubs = highest weighted degree (sum of finite incident 1/length —
     # strong-similarity vertices attract shortest paths)
@@ -100,16 +135,89 @@ def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
     return est
 
 
+@functools.partial(jax.jit, static_argnames=("n_hubs", "rounds", "backend"))
+def hub_factor_sparse(graph, *, n_hubs: int = 0, rounds: int = 32,
+                      backend: str = "auto"):
+    """Hub factorization of sparse APSP: ``(hubs (h,), D_h (h, n))``.
+
+    The sparse counterpart of :func:`apsp_hub`'s first half — the same
+    weighted-degree hub selection (``kernels.sparse_apsp.hub_strength``
+    is the CSR form of the dense ``strength`` reduction above) and the
+    same capped Bellman-Ford convergence contract, but O(h·n + E)
+    memory: relaxation runs over the 2(3n-6) CSR entries, never a dense
+    row of W.  Downstream, any pairwise distance is
+
+        D[u, v] = min(min_h D_h[h, u] + D_h[h, v],  w(u, v) if edge)
+
+    which the sparse DBHT tail evaluates in (panel, n) blocks
+    (core/sparse_dbht.py) — the full (n, n) matrix never exists.
+    """
+    h = hub_count(graph.n, n_hubs)
+    strength = sparse_kernels.hub_strength(graph)
+    hubs = jax.lax.top_k(strength, h)[1]
+    D_h = sparse_kernels.sparse_apsp_sources(graph, hubs, rounds=rounds,
+                                             backend=backend)
+    return hubs, D_h
+
+
+def csr_from_dense(W) -> "sparse_kernels.CSRGraph":
+    """CSR adjacency from a dense length matrix (finite off-diagonal
+    entries are edges).  Host-side edge extraction — the parity/interop
+    bridge for callers that already hold dense W; the pipeline builds
+    the CSR from the TMFG edge list directly."""
+    Wn = np.asarray(W)
+    n = Wn.shape[0]
+    iu, ju = np.triu_indices(n, k=1)
+    keep = np.isfinite(Wn[iu, ju])
+    edges = np.stack([iu[keep], ju[keep]], axis=1).astype(np.int32)
+    w = Wn[iu[keep], ju[keep]].astype(np.float32)
+    return sparse_kernels.csr_from_edges(n, jnp.asarray(edges),
+                                         jnp.asarray(w))
+
+
+def apsp_sparse(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
+                backend: str = "auto") -> jax.Array:
+    """Sparse hub APSP, densified back to (n, n) for parity and interop.
+
+    Runs :func:`hub_factor_sparse` on the CSR of W's finite entries and
+    composes ``min_h D_h[:, u] + D_h[:, v]`` with the same direct-edge
+    floor / symmetrization / zero-diagonal epilogue as :func:`apsp_hub`.
+    This materializes (n, n) by construction — it exists so tests and
+    benchmarks can compare the sparse kernel against the dense variants;
+    the production sparse tail never calls it (DESIGN.md §14.3).
+    """
+    graph = csr_from_dense(W)
+    _, D_h = hub_factor_sparse(graph, n_hubs=n_hubs, rounds=rounds,
+                               backend=backend)
+    n = graph.n
+    est = ops.minplus(D_h.T, D_h, backend=backend)
+    est = jnp.minimum(est, jnp.asarray(W, jnp.float32))
+    est = jnp.minimum(est, est.T)
+    est = est.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return est
+
+
 def apsp(W: jax.Array, *, method: str = "hub", n_hubs: int = 0,
          rounds: int = 32, backend: str = "auto") -> jax.Array:
-    """Dispatch to :func:`apsp_exact` or :func:`apsp_hub` by ``method``.
+    """Dispatch to exact / hub / sparse APSP by ``method``.
 
     The signature names every knob explicitly (no ``**kw`` grab bag):
-    ``n_hubs``/``rounds`` only apply to the hub approximation and are
+    ``n_hubs``/``rounds`` only apply to the hub approximations and are
     simply not forwarded to the exact path.
+
+    ``method="hub"`` requests the approximation, not the program shape:
+    below :data:`HUB_MIN_N` vertices the hub program's compile+dispatch
+    overhead exceeds the O(n³) it saves (BENCH_5.json regression), so
+    the dispatcher runs :func:`apsp_exact` there — a strictly more
+    accurate answer, faster.  Call :func:`apsp_hub` directly to force
+    the hub program shape regardless of n.
     """
     if method == "exact":
         return apsp_exact(W, backend=backend)
     if method == "hub":
+        if W.shape[0] < HUB_MIN_N:
+            return apsp_exact(W, backend=backend)
         return apsp_hub(W, n_hubs=n_hubs, rounds=rounds, backend=backend)
+    if method == "sparse":
+        return apsp_sparse(W, n_hubs=n_hubs, rounds=rounds, backend=backend)
     raise ValueError(f"unknown APSP method {method!r}")

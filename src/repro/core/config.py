@@ -43,7 +43,7 @@ VARIANTS = {
 }
 
 _METHODS = ("lazy", "corr", "orig")
-_APSP_METHODS = ("exact", "hub")
+_APSP_METHODS = ("exact", "hub", "sparse")
 _DBHT_IMPLS = ("device", "host")
 _BACKENDS = ("auto", "pallas", "interpret", "jnp")
 _SIMILARITIES = ("dense", "topk")
@@ -57,7 +57,10 @@ class PipelineConfig:
       method:      TMFG construction — "lazy" | "corr" | "orig".
       prefix:      prefix size P for method="orig".
       topk:        up-front candidate-table width (0 disables).
-      apsp_method: "hub" (paper optimization C3) | "exact".
+      apsp_method: "hub" (paper optimization C3) | "exact" | "sparse"
+                   (the edge-list hub factorization + sparse DBHT tail,
+                   DESIGN.md §14 — never materializes (n, n); staged
+                   execution, rejected by the fused program).
       apsp_hubs:   hub count for hub-APSP; 0 = ceil(sqrt(n)).
       apsp_rounds: Bellman-Ford rounds for the hub rows.
       backend:     kernel dispatch — "auto" | "pallas" | "interpret" | "jnp".

@@ -60,7 +60,9 @@ class DBHTResult:
     bubble_of: np.ndarray        # (n,) fine bubble assignment per vertex
     converging: np.ndarray       # ids of converging bubbles
     direction: np.ndarray        # (n-4,) +1 edge points parent->child else -1
-    apsp: np.ndarray             # (n, n) distances used
+    apsp: np.ndarray             # (n, n) distances — or the hub factor
+    #                              D_h (h, n) from the sparse tail (§14.3)
+    hubs: Optional[np.ndarray] = None  # (h,) hub vertex ids (sparse tail)
 
     def labels(self, k: int) -> np.ndarray:
         n = self.cluster_of.shape[0]
@@ -410,7 +412,8 @@ def dbht_batch(S, tmfg, *, apsp_method: Optional[str] = None,
                apsp_hubs: Optional[int] = None,
                apsp_rounds: Optional[int] = None,
                config: Optional[PipelineConfig] = None,
-               limit: Optional[int] = None) -> List[DBHTResult]:
+               limit: Optional[int] = None,
+               edge_weights=None) -> List[DBHTResult]:
     """Batched device DBHT: (B, n, n) similarities + batched TMFG arrays.
 
     The whole batch — APSP, tree directions, flow, fine assignment, HAC —
@@ -425,6 +428,22 @@ def dbht_batch(S, tmfg, *, apsp_method: Optional[str] = None,
     apsp_method, apsp_hubs, apsp_rounds, backend = _apsp_knobs(
         config, dict(apsp_method=apsp_method, apsp_hubs=apsp_hubs,
                      apsp_rounds=apsp_rounds, backend=backend))
+    if apsp_method == "sparse":
+        # the sparse tail is host-orchestrated per entry (DESIGN.md
+        # §14.6) — no dense (B, n, n) program to vmap.  S entries (or
+        # per-entry edge weights) are sliced on host.
+        from repro.core import sparse_dbht
+        B = (len(S) if S is not None else len(edge_weights))
+        B_out = B if limit is None else min(limit, B)
+        outs = []
+        for b in range(B_out):
+            tm_b = jax.tree.map(lambda a: np.asarray(a)[b], tmfg)
+            outs.append(sparse_dbht.dbht_sparse(
+                None if S is None else np.asarray(S[b]), tm_b,
+                edge_weights=(None if edge_weights is None
+                              else np.asarray(edge_weights[b])),
+                n_hubs=apsp_hubs, rounds=apsp_rounds, backend=backend))
+        return outs
     S_b = jnp.asarray(S, jnp.float32)
     B = S_b.shape[0]
     B_out = B if limit is None else min(limit, B)
@@ -444,8 +463,14 @@ def dbht(S, tmfg, *, apsp_method: Optional[str] = None,
          apsp_hubs: Optional[int] = None, apsp_rounds: Optional[int] = None,
          precomputed_apsp: Optional[np.ndarray] = None,
          config: Optional[PipelineConfig] = None,
-         impl: Optional[str] = None) -> DBHTResult:
+         impl: Optional[str] = None,
+         edge_weights: Optional[np.ndarray] = None) -> DBHTResult:
     """Run DBHT on a TMFG (accepts JAX or numpy TMFGResult fields).
+
+    ``apsp_method="sparse"`` routes to the edge-list tail
+    (core/sparse_dbht.py); there ``S`` may be None when ``edge_weights``
+    — the similarity per TMFG edge, data not config — carries the edge
+    values instead, so no (n, n) array is ever formed (DESIGN.md §14.3).
 
     ``impl`` selects the execution strategy (DESIGN.md §11.4):
     ``"device"`` (default) runs the entire stage as one jitted JAX
@@ -463,6 +488,14 @@ def dbht(S, tmfg, *, apsp_method: Optional[str] = None,
                      apsp_rounds=apsp_rounds, apsp_backend=apsp_backend))
     if impl is None:
         impl = config.dbht_impl if config is not None else "device"
+    if apsp_method == "sparse" and precomputed_apsp is None:
+        # the edge-list tail (DESIGN.md §14): host-orchestrated staged
+        # device programs, never an (n, n) buffer; impl="host" is its
+        # densified oracle (validated there)
+        from repro.core import sparse_dbht
+        return sparse_dbht.dbht_sparse(
+            S, tmfg, edge_weights=edge_weights, n_hubs=apsp_hubs,
+            rounds=apsp_rounds, backend=apsp_backend, impl=impl)
     if impl == "host":
         return _dbht_host(S, tmfg, apsp_method=apsp_method,
                           apsp_backend=apsp_backend,

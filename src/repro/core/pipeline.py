@@ -158,12 +158,23 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
             "run_pipeline_device IS the device program; "
             "config.dbht_impl='host' has no fused form — use "
             "cluster(..., fused=False) for the numpy oracle")
+    if config.apsp_method == "sparse":
+        # narrower than the generic topk staged-only error: the sparse
+        # tail is not merely unfused YET — it is host-orchestrated by
+        # design (per-cluster HAC programs with data-dependent shapes,
+        # DESIGN.md §14.6), so there is no single jaxpr to fuse into
+        raise ValueError(
+            "run_pipeline_device cannot fuse apsp_method='sparse': the "
+            "sparse APSP+DBHT tail runs as host-orchestrated staged "
+            "device programs (its per-cluster HAC shapes are "
+            "data-dependent, DESIGN.md §14.6) — cluster()/"
+            "cluster_batch() route it to the staged path automatically")
     if config.similarity != "dense":
         raise ValueError(
             "run_pipeline_device has no sparse-similarity form yet: "
             "similarity='topk' runs staged-only — call cluster()/"
             "cluster_batch() (they route it to the staged path), or "
-            "fused=False explicitly; DESIGN.md §13 documents the "
+            "fused=False explicitly; DESIGN.md §13.5 documents the "
             "limitation")
     arr = jnp.asarray(X_or_S, jnp.float32)
     if batched is None:
@@ -260,15 +271,17 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
     can_fuse = (cfg.dbht_impl == "device" and reuse_tmfg is None
-                and cfg.similarity == "dense")
+                and cfg.similarity == "dense"
+                and cfg.apsp_method != "sparse")
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device', no reuse_tmfg, and "
-            "similarity='dense' (the staged path is the host/warm-start "
-            "mode; the topk similarity path is staged-only for now — "
-            "DESIGN.md §13)")
+            "fused=True requires dbht_impl='device', no reuse_tmfg, "
+            "similarity='dense', and a dense APSP method (the staged "
+            "path is the host/warm-start mode; the topk similarity path "
+            "is staged-only for now — DESIGN.md §13 — and the sparse "
+            "APSP+DBHT tail is host-orchestrated by design, §14.6)")
 
     if fused:
         t0 = time.perf_counter()
@@ -325,6 +338,7 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     timings["similarity"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
+    w_edges = None
     if reuse_tmfg is not None:
         tm = reuse_tmfg
     elif approx and cfg.method == "lazy":
@@ -335,7 +349,9 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
         tm, w_edges, counters = approx_tmfg.build_tmfg_sparse(
             table, Xn=Zn, S=S)
         tm = jax.block_until_ready(tm)
-        if S is None:
+        if S is None and cfg.apsp_method != "sparse":
+            # the sparse APSP tail consumes w_edges directly (DESIGN.md
+            # §14.3); every other method needs the dense adjacency
             S = adjacency_from_weights(
                 tm.edges.shape[0] // 3 + 2, tm.edges, w_edges)
     elif approx:
@@ -355,7 +371,8 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     timings["tmfg"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    res = dbht_mod.dbht(S, tm, config=cfg, impl=cfg.dbht_impl)
+    res = dbht_mod.dbht(S, tm, config=cfg, impl=cfg.dbht_impl,
+                        edge_weights=w_edges)
     timings["dbht+apsp"] = time.perf_counter() - t0
     timings["total"] = sum(timings.values())
     if approx and collect_timings and counters is not None:
@@ -504,14 +521,16 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = cfg.dbht_impl == "device" and cfg.similarity == "dense"
+    can_fuse = (cfg.dbht_impl == "device" and cfg.similarity == "dense"
+                and cfg.apsp_method != "sparse")
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device' and "
-            "similarity='dense' (the topk path is staged-only for now — "
-            "DESIGN.md §13)")
+            "fused=True requires dbht_impl='device', similarity='dense', "
+            "and a dense APSP method (the topk path is staged-only for "
+            "now — DESIGN.md §13 — and the sparse APSP+DBHT tail is "
+            "host-orchestrated by design, §14.6)")
 
     timings: Dict[str, float] = {}
     t_start = time.perf_counter()
@@ -567,15 +586,16 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     timings["similarity"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    counters_b = None
+    counters_b = w_b = None
     if approx and cfg.method == "lazy":
         # vmapped sparse gain scan (DESIGN.md §13.3); when built from X
         # the per-edge weights scatter into the weighted adjacency so
-        # the batch never materializes a (B, n, n) similarity
+        # the batch never materializes a (B, n, n) similarity — and for
+        # the sparse APSP tail they are consumed directly (§14.6)
         tm_b, w_b, counters_b = _batched_sparse_tmfg(
             not have_S, table_b, S_b if have_S else src_b)
         tm_b = jax.block_until_ready(tm_b)
-        if S_b is None:
+        if S_b is None and cfg.apsp_method != "sparse":
             n = arr.shape[1]
             adj = jitcache.cached(
                 ("approx_adj", tm_b.edges.shape),
@@ -603,11 +623,15 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     if cfg.dbht_impl == "device":
         # the whole DBHT stage for the batch is ONE vmapped jitted
         # program plus one device→host transfer (DESIGN.md §11.4)
-        dbs = dbht_mod.dbht_batch(S_b, tm_b, config=cfg, limit=B_out)
+        dbs = dbht_mod.dbht_batch(S_b, tm_b, config=cfg, limit=B_out,
+                                  edge_weights=w_b)
         t_dbht = time.perf_counter() - t0
     else:
         dbs, t_dbht = None, 0.0
-        S_host = np.asarray(S_b[:B_out])
+        # S_b is None only on the sparse-tail approx path, where the
+        # per-edge weights stand in for the similarity (DESIGN.md §14.6)
+        S_host = None if S_b is None else np.asarray(S_b[:B_out])
+        w_host = None if w_b is None else np.asarray(w_b[:B_out])
     # ONE transfer, not B x leaves — sliced to B_out first so pad
     # entries of a bucketed micro-batch never cross the boundary
     tm_host = jax.device_get(jax.tree.map(lambda a: a[:B_out], tm_b))
@@ -618,7 +642,10 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         if dbs is not None:
             res = dbs[b]
         else:
-            res = dbht_mod.dbht(S_host[b], tm, config=cfg, impl="host")
+            res = dbht_mod.dbht(
+                None if S_host is None else S_host[b], tm, config=cfg,
+                impl="host",
+                edge_weights=None if w_host is None else w_host[b])
         kk = k if k is not None else len(res.converging)
         # per-result timings: the batched device stages (and the batched
         # device DBHT) amortize evenly over the B entries; the host-side

@@ -1,0 +1,660 @@
+"""Sparse DBHT tail: bubble flow + nested HAC from the hub APSP factor.
+
+The dense DBHT stage (core/dbht.py) consumes an (n, n) distance matrix.
+This module re-derives every step from the TMFG *edge list* and the hub
+factorization ``D_h (h, n)`` of ``core/apsp.hub_factor_sparse`` so the
+full (n, n) matrix never exists (DESIGN.md §14.3).  Any pairwise
+distance is composed on demand:
+
+    D~[u, v] = min( min_h D_h[h, u] + D_h[h, v],          # through a hub
+                    w(u, v) if (u, v) is a TMFG edge,     # direct-edge floor
+                    0 if u == v )
+
+which is bitwise the (n, n) matrix ``apsp.apsp_sparse`` would densify —
+``min`` is exact in floats and ``a + b`` rounds identically wherever it
+is evaluated, so blocked, per-cluster, and dense evaluations of D~
+agree to the bit (the DESIGN.md §14.5 parity contract,
+tests/test_sparse_apsp.py).
+
+Stage layout (host-orchestrated; each heavy step is a fixed-shape jitted
+device program held in the §12.3 executable cache):
+
+  1. directions — the host oracle's f64 side-strength sums, vectorized:
+     the per-(tree edge, triangle corner, adjacency slot) terms are
+     expanded in exactly the oracle's nested-loop order and reduced with
+     ``np.bincount`` (sequential accumulation), so the ±1 directions are
+     bitwise those of ``dbht._edge_directions``.
+  2. flow — the oracle's ``_flow_to_converging`` walk, reused as is
+     (O(B) host ints).
+  3. fine assignment + HAC statistics — one sweep of (bm, n) panels of
+     D~: masked mean-distance argmin per vertex, the global ``dmax``,
+     and the (C, C) cross-cluster max matrix, all from the same panel.
+     Peak live memory O(n·(h + bm) + C²); never (n, n).
+  4. nested HAC — per-cluster complete linkage on composed blocks
+     (bitwise the oracle's nested dendrogram, see §14.5 note below),
+     with an automatic scale fallback (``hac_max``) to a bubble-tree
+     approximation for clusters too large for an O(m²) block.
+
+Why per-cluster + top-level equals the oracle's ONE global run: the
+hierarchical offsets (hac.hierarchical_offsets) put every cross-cluster
+pair at ≥ m2 = 8·dmax while intra-cluster pairs stay ≤ 3·dmax, so the
+global flat-argmin performs all intra-cluster merges first; within a
+cluster the member positions map monotonically to global positions
+(members sorted ascending), so local flat-index tie-breaking matches the
+global one; after the intra merges each cluster's surviving row sits at
+its minimum member position holding the running max — exactly the
+cross-cluster max matrix — so a top-level run over clusters ordered by
+minimum vertex reproduces the remaining merges.  Merge heights are
+monotone under complete linkage, so a stable sort by height restores
+the oracle's emission order (the only divergence is an exact float tie
+in merge height ACROSS clusters — probability ~0 on real-valued data).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+import repro.core.apsp as apsp_mod
+import repro.core.hac as hac_mod
+import repro.core.jitcache as jitcache
+from repro.kernels import ops
+from repro.kernels.sparse_apsp import CSRGraph, csr_from_edges
+
+INF = jnp.inf
+
+# Largest cluster a per-cluster exact complete-linkage block is built
+# for.  Above this the (m, m) block and the O(m³) merge loop stop being
+# "small" and the bubble-tree approximate linkage takes over (§14.4) —
+# intra-bubble merges stay exact, inter-bubble merges use the bubble
+# tree's edges with 4x4 defining-vertex rep distances.
+SPARSE_EXACT_HAC_MAX = 4096
+
+# Row-panel height of the D~ sweep (stage 3).  Peak per-panel memory is
+# bm·n floats; 512 keeps a 50k-vertex sweep ~100 MB while amortizing
+# dispatch over ~n/bm panels.
+PANEL_ROWS = 512
+
+
+# ---------------------------------------------------------------------------
+# stage 1: edge directions (host f64, bitwise the oracle's sums)
+# ---------------------------------------------------------------------------
+
+def _directions_sparse(edges: np.ndarray, w_sim: np.ndarray,
+                       bubble_parent: np.ndarray, bubble_tri: np.ndarray,
+                       home_bubble: np.ndarray,
+                       chunk: int = 8192) -> np.ndarray:
+    """Vectorized ``dbht._edge_directions`` from the edge list.
+
+    The oracle accumulates, per tree edge b, per triangle corner v (in
+    tri order), per TMFG neighbor u of v (in edge-list order), the f64
+    similarity S[v, u] into the child or parent side.  The expansion
+    below materializes those terms in the SAME (b, corner, adjacency)
+    order and reduces with ``np.bincount`` — a sequential left-fold over
+    the array — so both side sums, and hence the ``s_child >= s_parent``
+    comparisons, are bitwise the oracle's.  Work and memory are
+    O(sum of triangle-corner degrees), the oracle's own footprint.
+    """
+    from repro.core.dbht import _euler_tour
+
+    B = bubble_parent.shape[0]
+    direction = np.zeros(B, np.int64)
+    if B <= 1:
+        return direction
+    tin, tout = _euler_tour(bubble_parent)
+    home_tin = tin[home_bubble]
+
+    E = edges.shape[0]
+    w64 = np.asarray(w_sim, np.float64)
+    src = np.concatenate([edges[:, 0], edges[:, 1]]).astype(np.int64)
+    dst = np.concatenate([edges[:, 1], edges[:, 0]]).astype(np.int64)
+    wd = np.concatenate([w64, w64])
+    eidx = np.concatenate([np.arange(E), np.arange(E)])
+    order = np.lexsort((eidx, src))            # adj[v] = neighbors by edge id
+    src, dst, wd = src[order], dst[order], wd[order]
+    n = home_bubble.shape[0]
+    start = np.searchsorted(src, np.arange(n))
+    deg = np.searchsorted(src, np.arange(n), side="right") - start
+
+    for b0 in range(1, B, chunk):
+        b1 = min(b0 + chunk, B)
+        corners = bubble_tri[b0:b1]            # (nb, 3)
+        g_start = start[corners].reshape(-1)   # (3·nb,) in (b, corner) order
+        g_len = deg[corners].reshape(-1)
+        offs = np.concatenate([[0], np.cumsum(g_len)])
+        total = int(offs[-1])
+        if total == 0:
+            continue
+        idx = (np.repeat(g_start - offs[:-1], g_len)
+               + np.arange(total, dtype=np.int64))
+        owner = np.repeat(np.arange(b0, b1).repeat(3), g_len)   # tree edge id
+        t_dst, t_w = dst[idx], wd[idx]
+        t0, t1, t2 = bubble_tri[owner].T
+        in_tri = (t_dst == t0) | (t_dst == t1) | (t_dst == t2)
+        ht = home_tin[t_dst]
+        child = (ht >= tin[owner]) & (ht < tout[owner])
+        s_child = np.bincount(owner, np.where(~in_tri & child, t_w, 0.0),
+                              minlength=B)
+        s_parent = np.bincount(owner, np.where(~in_tri & ~child, t_w, 0.0),
+                               minlength=B)
+        sl = slice(b0, b1)
+        direction[sl] = np.where(s_child[sl] >= s_parent[sl], 1, -1)
+    return direction
+
+
+# ---------------------------------------------------------------------------
+# stage 3: blocked D~ panel sweep (device)
+# ---------------------------------------------------------------------------
+
+def _panel_fn(h: int, n: int, bm: int, B: int, C: int):
+    """Jitted per-panel program: compose a (bm, n) slab of D~ and reduce
+    it to the fine assignment, the global max, and the (C, C) cross-
+    cluster maxima — the panel itself never leaves the program."""
+
+    def run(D_h, rows, cols, vals, bv, bubble_cluster, cluster_of, r0):
+        idx = jnp.clip(r0 + jnp.arange(bm), 0, n - 1)       # dup-pad last
+        A = D_h[:, idx]                                     # (h, bm)
+
+        def body(acc, ab):
+            a, brow = ab
+            return jnp.minimum(acc, a[:, None] + brow[None, :]), None
+
+        P0 = jnp.full((bm, n), INF, jnp.float32)
+        P, _ = lax.scan(body, P0, (A, D_h))                 # min over hubs
+        pos = rows - r0
+        ok = (pos >= 0) & (pos < bm)
+        P = P.at[jnp.where(ok, pos, 0), cols].min(
+            jnp.where(ok, vals, INF))                       # direct-edge floor
+        P = jnp.where(jnp.arange(n)[None, :] == idx[:, None], 0.0, P)
+
+        # fine assignment: mean distance to each bubble's 4 defining
+        # vertices, summed in the oracle's sequential association
+        md = (((P[:, bv[:, 0]] + P[:, bv[:, 1]]) + P[:, bv[:, 2]])
+              + P[:, bv[:, 3]]) / 4.0                       # (bm, B)
+        cl = cluster_of[idx]
+        same = bubble_cluster[None, :] == cl[:, None]
+        bub = jnp.argmin(jnp.where(same, md, INF), axis=1)
+
+        pmax = jnp.max(P)
+        colmax = jax.ops.segment_max(P.T, cluster_of, num_segments=C)
+        ccm = jax.ops.segment_max(colmax.T, cl, num_segments=C)  # (C, C)
+        return bub.astype(jnp.int32), pmax, ccm
+
+    return jitcache.cached(("sparse_panel", h, n, bm, B, C),
+                           lambda: jax.jit(run))
+
+
+def _sweep_panels(D_h, graph: CSRGraph, bv, bubble_cluster, cluster_of,
+                  C: int, bm: int):
+    """Run stage 3 over all row panels; returns (bubble_of, dmax, ccmax)."""
+    h, n = D_h.shape
+    bm = min(bm, n)
+    fn = _panel_fn(h, n, bm, bv.shape[0], C)
+    bub = np.empty(n, np.int64)
+    pmax = np.float32(-np.inf)
+    ccm = np.full((C, C), -np.inf, np.float32)
+    bc = jnp.asarray(bubble_cluster)
+    cl = jnp.asarray(cluster_of)
+    bvj = jnp.asarray(bv)
+    for r0 in range(0, n, bm):
+        b_p, p_p, c_p = fn(D_h, graph.rows, graph.cols, graph.vals,
+                           bvj, bc, cl, r0)
+        take = min(bm, n - r0)
+        bub[r0:r0 + take] = np.asarray(b_p)[:take]
+        pmax = np.maximum(pmax, np.float32(p_p))
+        ccm = np.maximum(ccm, np.asarray(c_p))
+    dmax = pmax + np.float32(1.0)          # hac.hierarchical_offsets' dmax
+    return bub, dmax, ccm
+
+
+# ---------------------------------------------------------------------------
+# stage 4a: per-cluster exact complete linkage (device, padded buckets)
+# ---------------------------------------------------------------------------
+
+def _cluster_hac_fn(h: int, m_pad: int, e_pad: int, backend: str):
+    """Jitted per-cluster block HAC: compose the cluster's D~ block from
+    the member columns of D_h, apply the cross-bubble offset, mask the
+    pads to +inf (their merges land after every real one) and run the
+    shared ``complete_linkage`` kernel."""
+
+    def run(A, valid, li, lj, lw, bloc, m1):
+        def body(acc, a):
+            return jnp.minimum(acc, a[:, None] + a[None, :]), None
+
+        D0 = jnp.full((m_pad, m_pad), INF, jnp.float32)
+        Dc, _ = lax.scan(body, D0, A)                       # (m_pad, m_pad)
+        Dc = Dc.at[li, lj].min(lw)                          # direct-edge floor
+        Dc = jnp.where(jnp.eye(m_pad, dtype=bool), 0.0, Dc)
+        cross = bloc[:, None] != bloc[None, :]
+        adj = Dc + jnp.where(cross, m1, 0.0)                # oracle's + order
+        pair_ok = valid[:, None] & valid[None, :]
+        adj = jnp.where(pair_ok, adj, INF)
+        return hac_mod.complete_linkage(adj, backend=backend)
+
+    return jitcache.cached(("sparse_chac", h, m_pad, e_pad, backend),
+                           lambda: jax.jit(run))
+
+
+def _edge_lookup(csr_keys: np.ndarray, csr_vals: np.ndarray, n: int,
+                 u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Direct-edge lengths for vertex pairs (inf when not a TMFG edge)."""
+    key = u.astype(np.int64) * n + v.astype(np.int64)
+    pos = np.searchsorted(csr_keys, key)
+    pos = np.minimum(pos, csr_keys.shape[0] - 1)
+    hit = csr_keys[pos] == key
+    return np.where(hit, csr_vals[pos], np.float32(np.inf)).astype(np.float32)
+
+
+def _exact_cluster_rows(D_h, members: np.ndarray, bubble_of: np.ndarray,
+                        csr_keys, csr_vals, n: int, m1: np.float32,
+                        backend: str) -> np.ndarray:
+    """(m-1, 4) local linkage of one cluster, bitwise the oracle's
+    corresponding merges (see module docstring).  Local leaf ids index
+    ``members``; internal ids are m_pad + row."""
+    m = members.shape[0]
+    m_pad = max(2, 1 << (m - 1).bit_length())
+    A = jnp.where(jnp.arange(m_pad) < m,
+                  D_h[:, jnp.asarray(np.pad(members, (0, m_pad - m),
+                                            mode="edge"))], INF)
+    valid = jnp.arange(m_pad) < m
+
+    # intra-cluster TMFG edges, local coordinates, padded to a bucket
+    lpos = np.full(n, -1, np.int64)
+    lpos[members] = np.arange(m)
+    key_lo = members.astype(np.int64) * n
+    lo = np.searchsorted(csr_keys, key_lo)
+    hi = np.searchsorted(csr_keys, key_lo + n)
+    lens = hi - lo
+    offs = np.concatenate([[0], np.cumsum(lens)])
+    gather = np.repeat(lo - offs[:-1], lens) + np.arange(int(offs[-1]))
+    gcols = (csr_keys[gather] % n).astype(np.int64)
+    keep = lpos[gcols] >= 0
+    li = np.repeat(np.arange(m), lens)[keep]
+    lj = lpos[gcols[keep]]
+    lw = csr_vals[gather][keep]
+    e = li.shape[0]
+    e_pad = max(1, 1 << max(0, (e - 1)).bit_length()) if e else 1
+    li = np.pad(li, (0, e_pad - e))
+    lj = np.pad(lj, (0, e_pad - e))
+    lw = np.pad(lw.astype(np.float32), (0, e_pad - e),
+                constant_values=np.float32(np.inf))
+
+    bloc = np.pad(bubble_of[members], (0, m_pad - m), constant_values=-1)
+    fn = _cluster_hac_fn(D_h.shape[0], m_pad, e_pad, backend)
+    Z = np.asarray(fn(A, valid, jnp.asarray(li), jnp.asarray(lj),
+                      jnp.asarray(lw), jnp.asarray(bloc),
+                      jnp.float32(m1)))
+    return Z[:m - 1], m_pad
+
+
+# ---------------------------------------------------------------------------
+# stage 4b: bubble-tree approximate linkage for oversized clusters
+# ---------------------------------------------------------------------------
+
+def _np_complete_linkage(D: np.ndarray) -> np.ndarray:
+    """Host complete linkage with the device kernel's flat-argmin
+    tie-breaking (small intra-bubble blocks of the tree mode)."""
+    m = D.shape[0]
+    D = D.astype(np.float32).copy()
+    np.fill_diagonal(D, np.inf)
+    ids = np.arange(m)
+    sizes = np.ones(m, np.int64)
+    alive = np.ones(m, bool)
+    Z = np.zeros((m - 1, 4), np.float32)
+    for k in range(m - 1):
+        big = np.where(alive[:, None] & alive[None, :], D, np.inf)
+        flat = int(np.argmin(big))
+        i, j = flat // m, flat % m
+        i, j = min(i, j), max(i, j)
+        Z[k] = (ids[i], ids[j], big[i, j], sizes[i] + sizes[j])
+        row = np.maximum(D[i], D[j])
+        D[i, :] = row
+        D[:, i] = row
+        D[i, i] = np.inf
+        alive[j] = False
+        ids[i] = m + k
+        sizes[i] += sizes[j]
+    return Z
+
+
+def _rep_dist_fn(h: int, B: int):
+    """Jitted 4x4 defining-vertex compose for every bubble-tree edge."""
+
+    def run(D_h, bv, parent):
+        child = jnp.arange(1, B)
+        pc = bv[child]                                      # (B-1, 4)
+        pp = bv[parent[1:]]
+
+        def body(acc, row):
+            a = row[pc]                                     # (B-1, 4)
+            b = row[pp]
+            return jnp.minimum(acc, a[:, :, None] + b[:, None, :]), None
+
+        acc0 = jnp.full((B - 1, 4, 4), INF, jnp.float32)
+        acc, _ = lax.scan(body, acc0, D_h)
+        samev = pc[:, :, None] == pp[:, None, :]
+        return jnp.where(samev, 0.0, acc)
+
+    return jitcache.cached(("sparse_repd", h, B), lambda: jax.jit(run))
+
+
+def _tree_cluster_rows(D_h_np, members, basin, bubble_of, rep_plus_m1,
+                       bubble_parent, csr_keys, csr_vals, n):
+    """Approximate linkage of one oversized cluster (DESIGN.md §14.4).
+
+    Intra-(fine-)bubble merges are exact complete linkage on composed
+    blocks; bubbles then merge along their basin's spanning subtree of
+    the bubble tree in ascending rep-distance order (heights clamped
+    monotone).  Returns a list of (height, left_ref, right_ref) rows
+    where a ref is ('v', vertex) or ('r', local row index).
+    """
+    rows: List[Tuple[np.float32, tuple, tuple]] = []
+    root_ref = {}                      # bubble id -> ref of its subtree root
+    root_h = {}                        # bubble id -> height of that root
+    by_bubble: dict = {}
+    for v in members:
+        by_bubble.setdefault(int(bubble_of[v]), []).append(int(v))
+
+    for b, verts in by_bubble.items():
+        verts = np.asarray(sorted(verts))
+        m = verts.shape[0]
+        if m == 1:
+            root_ref[b] = ("v", int(verts[0]))
+            root_h[b] = np.float32(0.0)
+            continue
+        A = D_h_np[:, verts]                                # (h, m)
+        Dc = np.min(A[:, :, None] + A[:, None, :], axis=0)
+        iu, ju = np.triu_indices(m, 1)
+        w = _edge_lookup(csr_keys, csr_vals, n, verts[iu], verts[ju])
+        Dc[iu, ju] = np.minimum(Dc[iu, ju], w)
+        Dc[ju, iu] = Dc[iu, ju]
+        np.fill_diagonal(Dc, 0.0)
+        Z = _np_complete_linkage(Dc)
+        base = len(rows)
+        for k in range(m - 1):
+            l, r = int(Z[k, 0]), int(Z[k, 1])
+            lref = ("v", int(verts[l])) if l < m else ("r", base + l - m)
+            rref = ("v", int(verts[r])) if r < m else ("r", base + r - m)
+            rows.append((np.float32(Z[k, 2]), lref, rref))
+        root_ref[b] = ("r", base + m - 2)
+        root_h[b] = np.float32(Z[m - 2, 2])
+
+    # Kruskal over the basin's bubble-tree edges by rep distance
+    basin_set = set(int(b) for b in basin)
+    tree_edges = [(rep_plus_m1[b - 1], b, int(bubble_parent[b]))
+                  for b in basin_set
+                  if b >= 1 and int(bubble_parent[b]) in basin_set]
+    tree_edges.sort(key=lambda t: float(t[0]))
+    uf = {b: b for b in basin_set}
+
+    def find(x):
+        while uf[x] != x:
+            uf[x] = uf[uf[x]]
+            x = uf[x]
+        return x
+
+    for hgt, b, p in tree_edges:
+        rb, rp = find(b), find(p)
+        if rb == rp:
+            continue
+        uf[rp] = rb
+        has_b, has_p = rb in root_ref, rp in root_ref
+        if has_b and has_p:
+            h_eff = np.float32(max(hgt, root_h[rb], root_h[rp]))
+            rows.append((h_eff, root_ref[rb], root_ref[rp]))
+            root_ref[rb] = ("r", len(rows) - 1)
+            root_h[rb] = h_eff
+            del root_ref[rp], root_h[rp]
+        elif has_p:                     # empty side unions silently
+            root_ref[rb] = root_ref.pop(rp)
+            root_h[rb] = root_h.pop(rp)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# assembly: per-cluster rows + top level -> one (n-1, 4) linkage
+# ---------------------------------------------------------------------------
+
+def _assemble_linkage(n: int, cluster_rows, cluster_roots, top_rows):
+    """Merge per-cluster row lists and the top-level rows into one
+    scipy-style linkage.  Intra-cluster rows are stably sorted by height
+    (restoring the oracle's global emission order — heights are monotone
+    per cluster, and every cross-cluster height exceeds every intra one);
+    sizes are recomputed bottom-up so they count vertices."""
+    flat: List[Tuple[np.float32, tuple, tuple]] = []
+    offsets = []
+    for rows in cluster_rows:
+        offsets.append(len(flat))
+        flat.extend(rows)
+    heights = np.asarray([r[0] for r in flat], np.float32)
+    order = np.argsort(heights, kind="stable")
+    n_intra = len(flat)
+    final_of = np.empty(n_intra + len(top_rows), np.int64)
+    final_of[order] = np.arange(n_intra)
+    for t in range(len(top_rows)):
+        final_of[n_intra + t] = n_intra + t
+
+    def resolve(ref, ci):
+        kind, val = ref
+        if kind == "v":
+            return val
+        return n + final_of[offsets[ci] + val]
+
+    Z = np.zeros((n - 1, 4), np.float32)
+    sizes = np.ones(2 * n, np.int64)
+    for ci, rows in enumerate(cluster_rows):
+        for j, (hgt, lref, rref) in enumerate(rows):
+            g = int(final_of[offsets[ci] + j])
+            l, r = resolve(lref, ci), resolve(rref, ci)
+            Z[g] = (l, r, hgt, 0)
+            sizes[n + g] = sizes[l] + sizes[r]
+    for t, (hgt, lref, rref) in enumerate(top_rows):
+        g = n_intra + t
+
+        def resolve_top(ref):
+            kind, val = ref
+            if kind == "top":
+                return n + n_intra + val
+            ci = val
+            rk, rv = cluster_roots[ci]
+            return rv if rk == "v" else n + final_of[offsets[ci] + rv]
+
+        l, r = resolve_top(lref), resolve_top(rref)
+        Z[g] = (l, r, hgt, 0)
+        sizes[n + g] = sizes[l] + sizes[r]
+    Z[:, 3] = sizes[n:n + n - 1]
+    return Z
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def densify(D_h, graph: CSRGraph, *, backend: str = "auto") -> jax.Array:
+    """(n, n) D~ from the hub factor — the parity/debug bridge.
+
+    Bitwise what the blocked panels and per-cluster blocks compose
+    (module docstring), and what ``_dbht_host`` consumes as
+    ``precomputed_apsp`` in the §14.5 parity tests.  Never called on the
+    production path: it IS the (n, n) buffer the sparse tail removes.
+    """
+    n = graph.n
+    W = jnp.full((n, n), INF, jnp.float32)
+    W = W.at[graph.rows, graph.cols].set(graph.vals)
+    W = W.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    est = ops.minplus(D_h.T, D_h, backend=backend)
+    est = jnp.minimum(est, W)
+    est = jnp.minimum(est, est.T)
+    return est.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+
+
+def dbht_sparse(S, tmfg, *, edge_weights=None, n_hubs: int = 0,
+                rounds: int = 32, backend: str = "auto",
+                impl: str = "device", bm: int = PANEL_ROWS,
+                hac_max: int = SPARSE_EXACT_HAC_MAX):
+    """DBHT from the TMFG edge list + hub APSP factor; never (n, n).
+
+    ``S`` may be None when ``edge_weights`` (similarity per TMFG edge,
+    (3n-6,)) is given — the staged sparse pipeline passes the weights it
+    built the TMFG from, so no dense similarity ever exists.
+    ``impl="host"`` densifies the factor and defers to the numpy oracle
+    (``_dbht_host`` with ``precomputed_apsp``) — the §14.5 parity
+    reference, not a production path.  Returns a ``DBHTResult`` whose
+    ``apsp`` field is the hub factor D_h (h, n) with the hub ids in
+    ``hubs`` (dense impls keep (n, n) there).
+    """
+    from repro.core import dbht as dbht_mod
+
+    edges = np.asarray(tmfg.edges)
+    bubble_parent = np.asarray(tmfg.bubble_parent)
+    bubble_verts = np.asarray(tmfg.bubble_verts)
+    home_bubble = np.asarray(tmfg.home_bubble)
+    n = home_bubble.shape[0]
+    B = bubble_parent.shape[0]
+
+    if edge_weights is None:
+        if S is None:
+            raise ValueError("dbht_sparse needs S or edge_weights")
+        S_np = np.asarray(S)
+        w_sim = S_np[edges[:, 0], edges[:, 1]].astype(np.float32)
+    else:
+        w_sim = np.asarray(edge_weights, np.float32)
+
+    # metric transform, the same f32 ops as apsp.edge_lengths
+    rho = jnp.clip(jnp.asarray(w_sim), -1.0, 1.0)
+    w_len = jnp.sqrt(jnp.maximum(2.0 * (1.0 - rho), 0.0))
+    graph = csr_from_edges(n, jnp.asarray(edges), w_len)
+    hubs, D_h = apsp_mod.hub_factor_sparse(graph, n_hubs=n_hubs,
+                                           rounds=rounds, backend=backend)
+
+    if impl == "host":
+        S_oracle = S if S is not None else tmfg_adj_sim(n, edges, w_sim)
+        return dbht_mod._dbht_host(
+            S_oracle, tmfg, apsp_method="sparse", apsp_backend=backend,
+            precomputed_apsp=np.asarray(densify(D_h, graph,
+                                                backend=backend)))
+    if impl != "device":
+        raise ValueError(f"unknown DBHT impl {impl!r}")
+
+    # stages 1-2: directions + flow (host, bitwise the oracle)
+    bubble_tri = np.asarray(tmfg.bubble_tri)
+    direction = _directions_sparse(edges, w_sim, bubble_parent, bubble_tri,
+                                   home_bubble)
+    dest, converging = dbht_mod._flow_to_converging(bubble_parent, direction)
+    conv_index = {int(c): i for i, c in enumerate(converging)}
+    bubble_cluster = np.array([conv_index[int(dest[b])] for b in range(B)],
+                              dtype=np.int64)
+    cluster_of = bubble_cluster[home_bubble]
+    C = converging.shape[0]
+
+    # stage 3: one blocked sweep of D~
+    bubble_of, dmax, ccmax = _sweep_panels(
+        D_h, graph, bubble_verts, bubble_cluster, cluster_of, C, bm)
+
+    # stage 4: nested HAC.  Offsets in the oracle's f32 arithmetic.
+    m1 = np.float32(2.0) * dmax
+    m2 = np.float32(8.0) * dmax
+    off2 = m2 - m1
+
+    rows_np = np.asarray(graph.rows, np.int64)
+    cols_np = np.asarray(graph.cols, np.int64)
+    csr_keys = rows_np * n + cols_np                # ascending (CSR sorted)
+    csr_vals = np.asarray(graph.vals)
+
+    # group members per cluster in one argsort (no O(C·n) scans)
+    v_order = np.argsort(cluster_of, kind="stable")
+    bounds = np.searchsorted(cluster_of[v_order], np.arange(C + 1))
+    members_of = [v_order[bounds[c]:bounds[c + 1]] for c in range(C)]
+    nonempty = [c for c in range(C) if members_of[c].size]
+    nonempty.sort(key=lambda c: int(members_of[c][0]))   # oracle's position
+
+    need_tree = any(members_of[c].size > hac_max for c in nonempty)
+    rep_plus_m1 = None
+    D_h_np = None
+    basin_of: dict = {}
+    if need_tree:
+        b_order = np.argsort(bubble_cluster, kind="stable")
+        b_bounds = np.searchsorted(bubble_cluster[b_order],
+                                   np.arange(C + 1))
+        basin_of = {c: b_order[b_bounds[c]:b_bounds[c + 1]]
+                    for c in range(C)}
+    if need_tree and B > 1:
+        rep = np.array(_rep_dist_fn(D_h.shape[0], B)(
+            D_h, jnp.asarray(bubble_verts),
+            jnp.asarray(bubble_parent)))             # (B-1, 4, 4)
+        child = np.arange(1, B)
+        pc = bubble_verts[child]
+        pp = bubble_verts[bubble_parent[child]]
+        for i in range(4):
+            for j in range(4):
+                w = _edge_lookup(csr_keys, csr_vals, n, pc[:, i], pp[:, j])
+                rep[:, i, j] = np.minimum(rep[:, i, j], w)
+        rep_plus_m1 = rep.max(axis=(1, 2)).astype(np.float32) + m1
+        D_h_np = np.asarray(D_h)
+
+    cluster_rows, cluster_roots = [], []
+    for c in nonempty:
+        members = members_of[c]
+        if members.size == 1:
+            cluster_rows.append([])
+            cluster_roots.append(("v", int(members[0])))
+            continue
+        if members.size <= hac_max:
+            Z, m_pad = _exact_cluster_rows(
+                D_h, members, bubble_of, csr_keys, csr_vals, n, m1, backend)
+            rows = []
+            for k in range(members.size - 1):
+                l, r = int(Z[k, 0]), int(Z[k, 1])
+                lref = (("v", int(members[l])) if l < m_pad
+                        else ("r", l - m_pad))
+                rref = (("v", int(members[r])) if r < m_pad
+                        else ("r", r - m_pad))
+                rows.append((np.float32(Z[k, 2]), lref, rref))
+        else:
+            rows = _tree_cluster_rows(
+                D_h_np, members, basin_of[c], bubble_of, rep_plus_m1,
+                bubble_parent, csr_keys, csr_vals, n)
+        cluster_rows.append(rows)
+        cluster_roots.append(("r", len(rows) - 1))
+
+    # top level: cross-cluster maxima over nonempty clusters, positions
+    # ordered by minimum member vertex (= the oracle's surviving row
+    # positions), offsets applied in the oracle's two-add order
+    Cn = len(nonempty)
+    if Cn > 1:
+        sel = np.asarray(nonempty)
+        top = ccmax[np.ix_(sel, sel)]
+        top = np.maximum(top, top.T)
+        top_adj = (top + m1) + off2
+        Zt = np.asarray(hac_mod.complete_linkage(jnp.asarray(top_adj),
+                                                 backend="jnp"))
+        top_rows = []
+        for k in range(Cn - 1):
+            l, r = int(Zt[k, 0]), int(Zt[k, 1])
+            lref = ("cl", l) if l < Cn else ("top", l - Cn)
+            rref = ("cl", r) if r < Cn else ("top", r - Cn)
+            top_rows.append((np.float32(Zt[k, 2]), lref, rref))
+    else:
+        top_rows = []
+
+    Z = _assemble_linkage(n, cluster_rows, cluster_roots, top_rows)
+
+    return dbht_mod.DBHTResult(
+        linkage=Z, cluster_of=cluster_of, bubble_of=bubble_of,
+        converging=converging, direction=direction[1:],
+        apsp=np.asarray(D_h), hubs=np.asarray(hubs))
+
+
+def tmfg_adj_sim(n: int, edges: np.ndarray, w_sim: np.ndarray) -> np.ndarray:
+    """Dense similarity adjacency from edge weights (host; oracle impl
+    only — the sparse device path never builds it)."""
+    S = np.zeros((n, n), np.float32)
+    S[edges[:, 0], edges[:, 1]] = w_sim
+    S[edges[:, 1], edges[:, 0]] = w_sim
+    np.fill_diagonal(S, 1.0)
+    return S

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from . import sparse_apsp as _sparse
 from .gainscan import masked_argmax_pallas
 from .minplus import minplus_jnp, minplus_pallas
 from .pearson import pearson_pallas
@@ -60,6 +61,17 @@ def masked_argmax(S: jax.Array, mask: jax.Array, *, backend: str = "auto",
     if b == "interpret":
         return masked_argmax_pallas(S, mask, bm=bm, bn=bn, interpret=True)
     return ref.masked_argmax_ref(S, mask)
+
+
+def sparse_relax(D: jax.Array, graph, *, backend: str = "auto",
+                 be: int = 8192) -> jax.Array:
+    """One multi-source tropical SpMM round against a CSR adjacency.
+
+    out[s, v] = min(D[s, v], min over CSR entries (u, v) of D[s, u] + w).
+    Every backend converges to the same fixed point bitwise — ``min`` is
+    exact in floats (DESIGN.md §14.1).  ``graph`` is a
+    ``kernels.sparse_apsp.CSRGraph``."""
+    return _sparse.sparse_relax(D, graph, backend=backend, be=be)
 
 
 def topk(X: jax.Array, k: int, *, backend: str = "auto", bm: int = 128,

@@ -1,0 +1,212 @@
+"""Sparse APSP on the TMFG edge list: blocked multi-source relaxation.
+
+The TMFG is planar — exactly 3n-6 edges — so the APSP stage never needs
+the dense (n, n) length matrix the min-plus kernels square (DESIGN.md
+§14.1).  This module is the sparse counterpart of ``kernels/minplus.py``:
+a CSR adjacency of the 2(3n-6) directed entries plus a frontier-style
+relaxation kernel
+
+    D[s, v]  <-  min(D[s, v],  min_{(u,v) in E}  D[s, u] + w(u, v))
+
+iterated to a fixed point from a small set of source rows (the hub
+vertices of ``core/apsp.apsp_hub``, DESIGN.md §14.2).  One round is a
+gather of the tail distances along the edge list, an elementwise add of
+the edge lengths, and a segmented min back into the head vertices —
+O(s·E) work and O(s·n + E) memory, never (n, n).
+
+Backends (the ``kernels/ops.py`` dispatch convention):
+  * ``"jnp"``       — one gather + ``jax.ops.segment_min`` per round (the
+    CSR entries are row-sorted, so the segmented min is a linear sweep).
+  * ``"pallas"`` / ``"interpret"`` — the gather+add half (the bandwidth-
+    bound part) runs as a blocked Pallas kernel over (source, edge)
+    tiles with the distance row panel resident in VMEM; the segmented
+    min composes in XLA as a deterministic ``.at[...].min`` scatter.
+
+Every backend computes the same fixed point bitwise: ``min`` is exact in
+floats (no rounding), so the relaxation order — blocked, segmented, or
+scattered — cannot change a single bit of the converged distances
+(pinned by tests/test_sparse_apsp.py against a numpy reference).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INF = jnp.inf
+
+
+class CSRGraph(NamedTuple):
+    """Row-sorted CSR adjacency of an undirected weighted graph.
+
+    ``rows`` is kept explicitly (it is ``indptr`` run-length decoded) so
+    the relaxation's segmented min and the hub-strength reduction are
+    plain segment ops with ``indices_are_sorted=True`` — no searchsorted
+    on the hot path.
+    """
+
+    indptr: jax.Array    # (n+1,) i32 — row start offsets
+    rows: jax.Array      # (m,) i32 — head vertex per entry, ascending
+    cols: jax.Array      # (m,) i32 — tail vertex per entry
+    vals: jax.Array      # (m,) f32 — edge weight per entry
+
+    @property
+    def n(self) -> int:
+        return self.indptr.shape[0] - 1
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def csr_from_edges(n: int, edges: jax.Array, w: jax.Array) -> CSRGraph:
+    """CSR adjacency from an undirected edge list (E, 2) + weights (E,).
+
+    Both directions of every edge are materialized (2E entries), sorted
+    by (row, col) — the layout every consumer assumes: the relaxation's
+    segmented min, the hub-strength reduction, and the host-side
+    direction stage's per-row range queries (core/sparse_dbht.py).
+    """
+    rows = jnp.concatenate([edges[:, 0], edges[:, 1]]).astype(jnp.int32)
+    cols = jnp.concatenate([edges[:, 1], edges[:, 0]]).astype(jnp.int32)
+    vals = jnp.concatenate([w, w]).astype(jnp.float32)
+    order = jnp.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    counts = jnp.zeros((n,), jnp.int32).at[rows].add(1)
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    return CSRGraph(indptr=indptr, rows=rows, cols=cols, vals=vals)
+
+
+def hub_strength(graph: CSRGraph) -> jax.Array:
+    """Weighted degree per vertex: sum of incident 1/(length + 1e-6).
+
+    The same strength ``core/apsp.apsp_hub`` reduces over its dense rows
+    (strong-similarity vertices attract shortest paths), expressed as a
+    segmented sum over the CSR entries — the hub SELECTION machinery is
+    shared, only the reduction layout differs (DESIGN.md §14.2).
+    """
+    return jax.ops.segment_sum(1.0 / (graph.vals + 1e-6), graph.rows,
+                               num_segments=graph.n,
+                               indices_are_sorted=True)
+
+
+# ---------------------------------------------------------------------------
+# one relaxation round, per backend
+# ---------------------------------------------------------------------------
+
+def _gather_add_kernel(d_ref, col_ref, val_ref, o_ref):
+    """Pallas tile: o[s, e] = d[s, cols[e]] + vals[e].
+
+    The (bs, n) distance row panel stays resident in VMEM across the
+    edge-block grid axis; the dynamic gather along the lane axis is the
+    kernel's whole point (see /opt/skills/guides — refs support dynamic
+    index vectors; on CPU the interpret path executes the same body).
+    """
+    d = d_ref[...]                                   # (bs, n)
+    cols = col_ref[...]                              # (be,)
+    o_ref[...] = jnp.take(d, cols, axis=1) + val_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "be", "interpret"))
+def gather_add_pallas(D: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                      bs: int = 32, be: int = 4096,
+                      interpret: bool = False) -> jax.Array:
+    """(s, n) distances + (m,) edge tails/weights -> (s, m) candidates."""
+    s, n = D.shape
+    m = cols.shape[0]
+    bs_, be_ = min(bs, s), min(be, m)
+    ps, pe = (-s) % bs_, (-m) % be_
+    Dp = jnp.pad(D.astype(jnp.float32), ((0, ps), (0, 0)))
+    colp = jnp.pad(cols, (0, pe))                    # pad gathers col 0
+    valp = jnp.pad(vals.astype(jnp.float32), (0, pe),
+                   constant_values=INF)              # inf: never wins a min
+    out = pl.pallas_call(
+        _gather_add_kernel,
+        grid=(Dp.shape[0] // bs_, colp.shape[0] // be_),
+        in_specs=[
+            pl.BlockSpec((bs_, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((be_,), lambda i, j: (j,)),
+            pl.BlockSpec((be_,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bs_, be_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Dp.shape[0], colp.shape[0]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(Dp, colp, valp)
+    return out[:s, :m]
+
+
+def sparse_relax(D: jax.Array, graph: CSRGraph, *, backend: str = "auto",
+                 be: int = 8192) -> jax.Array:
+    """One multi-source relaxation round: tropical SpMM against the CSR.
+
+    Returns ``min(D, candidates)`` — monotone non-increasing, so iterating
+    to a fixed point yields the (unique) single-source distances from
+    every row's source set.  Dispatch follows ``kernels/ops.py``.
+    """
+    from . import ops  # local: ops imports this module's jit wrappers
+
+    b = ops._resolve(backend)
+    n = graph.n
+    if b == "jnp":
+        cand = D[:, graph.cols] + graph.vals[None, :]          # (s, m)
+        upd = jax.ops.segment_min(cand.T, graph.rows, num_segments=n,
+                                  indices_are_sorted=True)     # (n, s)
+        return jnp.minimum(D, upd.T)
+
+    # pallas / interpret: blocked gather+add kernel + deterministic
+    # scatter-min per edge block (min is exact — blocking cannot change
+    # the fixed point, see module docstring)
+    m = graph.rows.shape[0]
+    be_ = min(be, m)
+    pe = (-m) % be_
+    rowp = jnp.pad(graph.rows, (0, pe))
+    colp = jnp.pad(graph.cols, (0, pe))
+    valp = jnp.pad(graph.vals, (0, pe), constant_values=INF)
+    nblk = rowp.shape[0] // be_
+    blocks = (rowp.reshape(nblk, be_), colp.reshape(nblk, be_),
+              valp.reshape(nblk, be_))
+
+    def body(Dcur, blk):
+        r, c, v = blk
+        cand = gather_add_pallas(Dcur, c, v, interpret=(b == "interpret"))
+        return Dcur.at[:, r].min(cand), None
+
+    out, _ = lax.scan(body, D, blocks)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# multi-source fixed point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("rounds", "backend", "be"))
+def sparse_apsp_sources(graph: CSRGraph, sources: jax.Array, *,
+                        rounds: int = 32, backend: str = "auto",
+                        be: int = 8192) -> jax.Array:
+    """Distances (s, n) from ``sources`` by iterated sparse relaxation.
+
+    Frontier-style early exit: the while_loop stops as soon as a round
+    changes nothing (the fixed point), with ``rounds`` as the cap — the
+    same convergence contract as ``apsp_hub``'s Bellman-Ford scan
+    (extra rounds are no-ops; the TMFG's diameter is small in practice).
+    """
+    n = graph.n
+    s = sources.shape[0]
+    D0 = jnp.full((s, n), INF, jnp.float32)
+    D0 = D0.at[jnp.arange(s), sources].set(0.0)
+
+    def cond(carry):
+        i, _, changed = carry
+        return (i < rounds) & changed
+
+    def body(carry):
+        i, D, _ = carry
+        D2 = sparse_relax(D, graph, backend=backend, be=be)
+        return i + 1, D2, jnp.any(D2 < D)
+
+    _, D, _ = lax.while_loop(cond, body, (0, D0, jnp.bool_(True)))
+    return D

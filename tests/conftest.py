@@ -22,3 +22,31 @@ def clustered_similarity(n, k=4, L=64, noise=0.8, seed=0):
 
     X, labels = make_dataset(n, L, k, noise=noise, seed=seed)
     return np.corrcoef(X), X, labels
+
+
+def regime_batch(B, n, L=40, k=3, noise=0.7, stack=True):
+    """B clustered regime datasets, seeded 0..B-1 — the batch-parity
+    input shared by the approx/DBHT/sparse test files."""
+    from repro.data.timeseries import make_dataset
+
+    Xs = [make_dataset(n, L, k, noise=noise, seed=s)[0] for s in range(B)]
+    return np.stack(Xs) if stack else Xs
+
+
+def tmfg_f32(S, method="lazy", prefix=10, topk=0):
+    """TMFG of a host similarity matrix through the device f32 cast —
+    the builder idiom every parity test repeats."""
+    import jax.numpy as jnp
+
+    from repro.core.tmfg import build_tmfg
+
+    return build_tmfg(jnp.asarray(S, jnp.float32), method=method,
+                      prefix=prefix, topk=topk)
+
+
+def random_symmetric(n, seed):
+    """Arbitrary symmetric matrix — the hypothesis-style adversarial
+    input (no clustered structure, ties possible)."""
+    r = np.random.default_rng(seed)
+    A = r.normal(size=(n, n))
+    return (A + A.T) / 2

@@ -21,7 +21,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from conftest import clustered_similarity
+from conftest import clustered_similarity, regime_batch
 from repro.approx import knn, project, quality
 from repro.approx.sparse_tmfg import build_tmfg_sparse, sparse_lazy_tmfg
 from repro.core.ari import ari
@@ -76,7 +76,7 @@ def test_full_k_bitwise_identical_batched(B):
     """Batch shapes: every entry of the vmapped sparse path equals the
     dense staged batch entry AND the single-matrix approx run."""
     n = 48
-    Xs = [make_dataset(n, 40, 3, noise=0.7, seed=s)[0] for s in range(B)]
+    Xs = regime_batch(B, n, stack=False)
     cfga = _approx_cfg("opt", n - 1)
     ba = cluster_batch(np.stack(Xs), k=3, config=cfga)
     bd = cluster_batch(np.stack(Xs), k=3, config=PipelineConfig.opt(),
@@ -140,6 +140,56 @@ def test_similarity_and_tmfg_never_materialize_dense_square():
     from repro.kernels import ops
     dense_text = _jaxpr_text(
         lambda x: build_tmfg(ops.pearson(x, backend="jnp")), X)
+    assert f"f32[{n},{n}]" in dense_text
+
+
+def test_full_sparse_pipeline_never_materializes_dense_square():
+    """ISSUE 6: with ``apsp_method="sparse"`` the CONTRACT extends past
+    the §13.5 boundary — every device program of the staged `.approx()`
+    pipeline (similarity+TMFG above, then hub factorization, the (bm, n)
+    panel sweep, and the per-cluster HAC blocks) is free of (n, n)
+    buffers for any dtype.  The dense tail's own program is the positive
+    control: the same detector trips on it."""
+    from repro.core import apsp as apsp_mod
+    from repro.core import sparse_dbht
+    from repro.kernels.sparse_apsp import csr_from_edges
+
+    n, h, bm = 256, 16, 64
+    E = 3 * n - 6
+    e = jnp.zeros((E, 2), jnp.int32)
+    w = jnp.ones((E,), jnp.float32)
+
+    # stage: hub factorization over the CSR edges — O(h·n + E) live
+    text = _jaxpr_text(
+        lambda e, w: apsp_mod.hub_factor_sparse(
+            csr_from_edges(n, e, w), n_hubs=h), e, w)
+    assert f"[{n},{n}]" not in text, "hub factorization allocates (n, n)"
+
+    # stage: the D~ panel sweep — (bm, n) slabs, (C, C) reductions
+    B, C = n - 3, 8
+    fn = sparse_dbht._panel_fn(h, n, bm, B, C)
+    text = _jaxpr_text(
+        fn, jnp.zeros((h, n)), jnp.zeros((2 * E,), jnp.int32),
+        jnp.zeros((2 * E,), jnp.int32), jnp.zeros((2 * E,)),
+        jnp.zeros((B, 4), jnp.int32), jnp.zeros((B,), jnp.int32),
+        jnp.zeros((n,), jnp.int32), 0)
+    assert f"[{n},{n}]" not in text, "panel sweep allocates (n, n)"
+    assert f"f32[{bm},{n}]" in text          # the panel IS there
+
+    # stage: a per-cluster HAC block at m_pad < n — (m_pad, m_pad) only
+    m_pad, e_pad = 64, 32
+    cfn = sparse_dbht._cluster_hac_fn(h, m_pad, e_pad, "jnp")
+    text = _jaxpr_text(
+        cfn, jnp.zeros((h, m_pad)), jnp.ones((m_pad,), bool),
+        jnp.zeros((e_pad,), jnp.int32), jnp.zeros((e_pad,), jnp.int32),
+        jnp.zeros((e_pad,)), jnp.zeros((m_pad,), jnp.int32),
+        jnp.float32(1.0))
+    assert f"[{n},{n}]" not in text, "cluster HAC allocates (n, n)"
+
+    # positive control: the dense APSP tail on the same n trips it
+    dense_text = _jaxpr_text(
+        lambda W: apsp_mod.apsp_hub(W, n_hubs=h),
+        jnp.zeros((n, n), jnp.float32))
     assert f"f32[{n},{n}]" in dense_text
 
 

@@ -12,11 +12,10 @@ import pytest
 
 import jax.numpy as jnp
 
-from conftest import clustered_similarity
+from conftest import clustered_similarity, regime_batch, tmfg_f32
 import repro.core.dbht as D
 from repro.core.pipeline import cluster, cluster_batch, VARIANTS, \
     resolve_variant
-from repro.core.tmfg import build_tmfg
 from repro.data.timeseries import make_dataset
 
 
@@ -35,8 +34,7 @@ def test_device_matches_host_all_variants(variant):
     construction methods — is bitwise identical across impls."""
     S, _, _ = clustered_similarity(64, k=4, seed=5)
     method, prefix, topk, apsp_method = resolve_variant(variant)
-    tm = build_tmfg(jnp.asarray(S, jnp.float32), method=method,
-                    prefix=prefix, topk=topk)
+    tm = tmfg_f32(S, method=method, prefix=prefix, topk=topk)
     rh = D.dbht(S, tm, apsp_method=apsp_method, impl="host")
     rd = D.dbht(S, tm, apsp_method=apsp_method, impl="device")
     _assert_dbht_equal(rh, rd, msg=variant)
@@ -102,7 +100,7 @@ def test_device_matches_host_degenerate_small_n(n, variant):
 def test_cluster_batch_device_dbht_parity(variant):
     """§11.4 across the batch: every entry of a device-DBHT
     cluster_batch equals the host-impl single-matrix pipeline."""
-    Xs = [make_dataset(48, 40, 3, noise=0.7, seed=s)[0] for s in range(3)]
+    Xs = regime_batch(3, 48, stack=False)
     S = np.stack([np.corrcoef(x).astype(np.float32) for x in Xs])
     # fused=False: this pins the staged dbht_batch stage bitwise against
     # the host walk (see test_device_matches_host_degenerate_small_n)
@@ -121,7 +119,7 @@ def test_cluster_batch_device_dbht_parity(variant):
 def test_cluster_batch_degenerate_small_n_batch():
     """Batched device DBHT on the smallest legal graphs (n=5: B=2
     bubbles, one tree edge) — including the limit/pad path."""
-    Xs = [make_dataset(5, 24, 2, noise=0.7, seed=s)[0] for s in range(4)]
+    Xs = regime_batch(4, 5, L=24, k=2, stack=False)
     X = np.stack(Xs)
     bres = cluster_batch(X, variant="par-200", dbht_impl="device", limit=3,
                          fused=False)
@@ -133,7 +131,7 @@ def test_cluster_batch_degenerate_small_n_batch():
 
 def test_device_precomputed_apsp():
     S, _, _ = clustered_similarity(48, k=3, seed=9)
-    tm = build_tmfg(jnp.asarray(S, jnp.float32), method="lazy", topk=64)
+    tm = tmfg_f32(S, topk=64)
     rh = D.dbht(S, tm, apsp_method="exact", impl="host")
     rd = D.dbht(S, tm, precomputed_apsp=rh.apsp, impl="device")
     _assert_dbht_equal(rh, rd)
@@ -142,7 +140,7 @@ def test_device_precomputed_apsp():
 def test_dbht_batch_single_transfer_entry_points():
     """dbht_batch is the batched device entry point: list of DBHTResult
     with host-typed fields, honoring limit."""
-    Xs = [make_dataset(40, 32, 3, noise=0.7, seed=s)[0] for s in range(2)]
+    Xs = regime_batch(2, 40, L=32, stack=False)
     S = np.stack([np.corrcoef(x).astype(np.float32) for x in Xs])
     from repro.core.pipeline import _batched_tmfg
     tms = _batched_tmfg("lazy", 10, 64)(jnp.asarray(S, jnp.float32))
@@ -158,6 +156,6 @@ def test_dbht_batch_single_transfer_entry_points():
 
 def test_unknown_impl_rejected():
     S, _, _ = clustered_similarity(24, k=2, seed=2)
-    tm = build_tmfg(jnp.asarray(S, jnp.float32))
+    tm = tmfg_f32(S)
     with pytest.raises(ValueError, match="impl"):
         D.dbht(S, tm, impl="gpu")

@@ -40,6 +40,7 @@ def test_design_md_exists_and_has_sections():
                  "11", "11.1", "11.2", "11.3", "11.4",
                  "12", "12.1", "12.2", "12.3", "12.4",
                  "13", "13.1", "13.2", "13.3", "13.4", "13.5",
+                 "14", "14.1", "14.2", "14.3", "14.4", "14.5", "14.6",
                  "Arch-applicability"):
         assert must in sections, f"DESIGN.md lost §{must}"
 
@@ -71,6 +72,17 @@ def test_sparse_similarity_sections_are_cited_from_code():
     src/tests/benchmarks."""
     refs = _cited_refs()
     for sub in ("13", "13.1", "13.2", "13.3", "13.4", "13.5"):
+        assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_sparse_apsp_sections_are_cited_from_code():
+    """§14's spec stays honest the same way (ISSUE 6): the relaxation
+    kernel, the hub reuse + threshold, the D~ composition contract, the
+    tree fallback, the parity contract and the host-orchestration
+    boundary must each be cited from at least one docstring in
+    src/tests/benchmarks."""
+    refs = _cited_refs()
+    for sub in ("14", "14.1", "14.2", "14.3", "14.4", "14.5", "14.6"):
         assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
 
 

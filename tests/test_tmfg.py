@@ -5,7 +5,7 @@ import pytest
 
 import jax
 
-from conftest import clustered_similarity
+from conftest import clustered_similarity, random_symmetric
 from repro.core import tmfg_ref as R
 from repro.core.tmfg import build_tmfg
 
@@ -121,18 +121,14 @@ if HAVE_HYP:
     @given(st.integers(min_value=5, max_value=40), st.integers(0, 10_000))
     def test_property_invariants_random(n, seed):
         """Hypothesis: invariants hold for arbitrary symmetric inputs."""
-        r = np.random.default_rng(seed)
-        A = r.normal(size=(n, n))
-        S = (A + A.T) / 2
+        S = random_symmetric(n, seed)
         res = _np(build_tmfg(S, method="lazy"))
         check_invariants(res, n, S)
 
     @settings(max_examples=10, deadline=None)
     @given(st.integers(min_value=6, max_value=30), st.integers(0, 10_000))
     def test_property_lazy_matches_ref(n, seed):
-        r = np.random.default_rng(seed)
-        A = r.normal(size=(n, n))
-        S = (A + A.T) / 2
+        S = random_symmetric(n, seed)
         ref = R.tmfg_lazy(S)
         got = _np(build_tmfg(S, method="lazy"))
         # ties are possible with arbitrary data; compare edge sums not order
