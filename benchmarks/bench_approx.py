@@ -24,10 +24,13 @@ import numpy as np
 
 import jax
 
+import time
+
 from repro.approx import knn, project, quality
 from repro.data.timeseries import make_dataset
 from repro.kernels import ops
-from .common import emit, stage_cost as _stage, timeit
+from repro.obs import trace as obs_trace
+from .common import emit, stage_cost as _stage
 
 SIM_K = 64
 SKETCH_DIM = 32
@@ -42,11 +45,12 @@ def run(scale: float = 1.0):
         k = min(SIM_K, n - 1)
         X = make_dataset(n, L, 4, noise=0.6, seed=0)[0]
 
-        t_dense, b_dense = _stage(lambda: ops.pearson(X, backend="auto"))
-        t_topk, b_topk = _stage(
+        t_dense, b_dense, c_dense = _stage(
+            lambda: ops.pearson(X, backend="auto"))
+        t_topk, b_topk, c_topk = _stage(
             lambda: tuple(knn.topk_pearson(X, k)))
         pool = min(POOL, n - 1)
-        t_pool, _ = _stage(lambda: tuple(knn.rescore_pools(
+        t_pool, _, c_pool = _stage(lambda: tuple(knn.rescore_pools(
             X, project.candidate_pools(X, pool, dim=SKETCH_DIM), k)))
 
         if n_base >= 2000 and n >= 2000:
@@ -62,6 +66,8 @@ def run(scale: float = 1.0):
                     f"{b_dense / max(b_topk, 1):.1f}x",
             t_dense=f"{t_dense:.4f}", t_topk=f"{t_topk:.4f}",
             t_pool=f"{t_pool:.4f}",
+            compile_s=f"{c_dense + c_topk + c_pool:.3f}",
+            run_s=f"{t_topk:.4f}",
             bytes_dense=b_dense, bytes_topk=b_topk,
         ))
 
@@ -70,16 +76,22 @@ def run(scale: float = 1.0):
     # live in bench_sparse_apsp, DESIGN.md §14)
     n = max(24, int(round(240 * scale)))
     X = make_dataset(n, 64, 4, noise=0.6, seed=1)[0]
-    rep = quality.compare_to_dense(X, sim_k=min(SIM_K, n - 1), k=4)
+    with obs_trace.watch_recompiles() as w:
+        t0 = time.perf_counter()
+        rep = quality.compare_to_dense(X, sim_k=min(SIM_K, n - 1), k=4)
+        wall = time.perf_counter() - t0
     rows.append(dict(
         name=f"approx/e2e-quality/n{n}",
         us_per_call="",
         derived=f"ari={rep['ari']:.3f}",
+        compile_s=f"{w.compile_s:.3f}",
+        run_s=f"{max(wall - w.compile_s, 0.0):.3f}",
         edge_recall=f"{rep['edge_recall']:.3f}",
         edge_sum_ratio=f"{rep['edge_sum_ratio']:.4f}",
     ))
     return emit(rows, ["name", "us_per_call", "derived", "t_dense",
-                       "t_topk", "t_pool", "bytes_dense", "bytes_topk",
+                       "t_topk", "t_pool", "compile_s", "run_s",
+                       "bytes_dense", "bytes_topk",
                        "edge_recall", "edge_sum_ratio"])
 
 

@@ -1,12 +1,17 @@
 """Paper fig. 6: ARI per variant per dataset (+ the paper's average-ARI
-claim: OPT within noise of PAR-10, PAR-200 clearly worse)."""
+claim: OPT within noise of PAR-10, PAR-200 clearly worse).  Rows carry
+the ``compile_s``/``run_s`` split (DESIGN.md §15.2) for the per-dataset
+sweep across variants."""
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.core.ari import ari
 from repro.core.pipeline import cluster
+from repro.obs import trace as obs_trace
 from .common import emit, load_bench_datasets
 
 
@@ -14,22 +19,31 @@ def run(scale: float = 1.0,
         variants=("par-1", "par-10", "par-200", "corr", "heap", "opt")):
     rows = []
     scores = {v: [] for v in variants}
+    tot_compile = tot_run = 0.0
     for ds in load_bench_datasets(scale):
         row = dict(name=f"fig6/{ds['name']}", us_per_call="")
-        for v in variants:
-            res = cluster(ds["X"], k=ds["k"], variant=v)
-            a = ari(ds["labels"], res.labels)
-            scores[v].append(a)
-            row[f"ari_{v}"] = f"{a:.3f}"
+        with obs_trace.watch_recompiles() as w:
+            t0 = time.perf_counter()
+            for v in variants:
+                res = cluster(ds["X"], k=ds["k"], variant=v)
+                a = ari(ds["labels"], res.labels)
+                scores[v].append(a)
+                row[f"ari_{v}"] = f"{a:.3f}"
+            wall = time.perf_counter() - t0
         row["derived"] = f"opt={row['ari_opt']}"
+        row["compile_s"] = f"{w.compile_s:.3f}"
+        row["run_s"] = f"{max(wall - w.compile_s, 0.0):.3f}"
+        tot_compile += w.compile_s
+        tot_run += max(wall - w.compile_s, 0.0)
         rows.append(row)
     avg = {v: float(np.mean(s)) for v, s in scores.items()}
     rows.append(dict(
         name="fig6/AVERAGE", us_per_call="",
         derived=f"opt_minus_par10={avg['opt'] - avg['par-10']:+.3f}",
+        compile_s=f"{tot_compile:.3f}", run_s=f"{tot_run:.3f}",
         **{f"ari_{v}": f"{a:.3f}" for v, a in avg.items()}))
-    return emit(rows, ["name", "us_per_call", "derived"]
-                + [f"ari_{v}" for v in variants])
+    return emit(rows, ["name", "us_per_call", "derived", "compile_s",
+                       "run_s"] + [f"ari_{v}" for v in variants])
 
 
 if __name__ == "__main__":

@@ -4,11 +4,14 @@ The paper's claims: CORR/HEAP within 1% of exact; PAR-200 much worse."""
 
 from __future__ import annotations
 
+import time
+
 import jax
 
 from repro.core.tmfg import build_tmfg
 from repro.core.pipeline import VARIANTS
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 from .common import emit, load_bench_datasets
 
 
@@ -17,21 +20,27 @@ def run(scale: float = 1.0):
     for ds in load_bench_datasets(scale):
         S = ops.pearson(jax.numpy.asarray(ds["X"]))
         sums = {}
-        for v, kw in VARIANTS.items():
-            res = build_tmfg(S, method=kw["method"],
-                             prefix=kw.get("prefix", 10), topk=kw["topk"])
-            sums[v] = float(res.edge_sum)
+        with obs_trace.watch_recompiles() as w:
+            t0 = time.perf_counter()
+            for v, kw in VARIANTS.items():
+                res = build_tmfg(S, method=kw["method"],
+                                 prefix=kw.get("prefix", 10),
+                                 topk=kw["topk"])
+                sums[v] = float(res.edge_sum)
+            wall = time.perf_counter() - t0
         base = sums["par-1"]
         row = dict(name=f"fig7/{ds['name']}", us_per_call="",
                    derived=f"heap_pct_reduction="
-                           f"{100 * (base - sums['heap']) / abs(base):.2f}%")
+                           f"{100 * (base - sums['heap']) / abs(base):.2f}%",
+                   compile_s=f"{w.compile_s:.3f}",
+                   run_s=f"{max(wall - w.compile_s, 0.0):.3f}")
         for v, s in sums.items():
             row[f"pct_red_{v}"] = f"{100 * (base - s) / abs(base):.2f}"
         rows.append(row)
         # the paper's <1% claim for heap/corr
         assert sums["heap"] >= 0.97 * base, (ds["name"], sums)
-    return emit(rows, ["name", "us_per_call", "derived"]
-                + [f"pct_red_{v}" for v in VARIANTS])
+    return emit(rows, ["name", "us_per_call", "derived", "compile_s",
+                       "run_s"] + [f"pct_red_{v}" for v in VARIANTS])
 
 
 if __name__ == "__main__":

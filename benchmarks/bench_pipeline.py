@@ -7,6 +7,12 @@ DBHT) where the fused path pays one dispatch and one transfer.  This
 section times both plans end to end — one matrix and a B=8 batch — and
 reports the staged/fused ratio; the acceptance bar is fused ≤ staged on
 the batched row (the serving shape the stream scheduler flushes).
+
+Rows split ``compile_s`` from ``run_s`` (DESIGN.md §15.2), and the
+fused leg's warm repeats ARE the serving replay: ``replay_recompiles``
+must be 0 (the ``--check-schema`` CI gate enforces it) — a nonzero
+value is the jitcache replaying an executable that XLA re-lowered
+anyway, the failure mode the §15.2 watchdog alarms on.
 """
 
 from __future__ import annotations
@@ -16,16 +22,21 @@ import numpy as np
 from repro.core.config import PipelineConfig
 from repro.core.pipeline import cluster, cluster_batch
 from repro.data.timeseries import make_dataset
-from .common import emit, timeit
+from .common import emit, measured
 
 
-def _row(name: str, t_fused: float, t_staged: float) -> dict:
+def _row(name: str, m_fused: dict, m_staged: dict) -> dict:
+    t_fused, t_staged = m_fused["run_s"], m_staged["run_s"]
     return dict(
         name=name,
         us_per_call=f"{t_fused * 1e6:.0f}",
         derived=f"staged_over_fused={t_staged / t_fused:.2f}x",
         t_fused=f"{t_fused:.4f}",
         t_staged=f"{t_staged:.4f}",
+        compile_s=f"{m_fused['compile_s'] + m_staged['compile_s']:.3f}",
+        run_s=f"{t_fused:.4f}",
+        replay_recompiles=(m_fused["replay_recompiles"]
+                           + m_staged["replay_recompiles"]),
     )
 
 
@@ -38,18 +49,19 @@ def run(scale: float = 1.0):
 
     rows = [
         _row(f"pipeline/single/n{n}",
-             timeit(lambda: cluster(X, k=4, config=cfg, fused=True),
-                    repeats=3, warmup=1),
-             timeit(lambda: cluster(X, k=4, config=cfg, fused=False),
-                    repeats=3, warmup=1)),
+             measured(lambda: cluster(X, k=4, config=cfg, fused=True),
+                      repeats=3),
+             measured(lambda: cluster(X, k=4, config=cfg, fused=False),
+                      repeats=3)),
         _row(f"pipeline/batch/B{B}-n{n}",
-             timeit(lambda: cluster_batch(Xb, k=4, config=cfg, fused=True),
-                    repeats=3, warmup=1),
-             timeit(lambda: cluster_batch(Xb, k=4, config=cfg, fused=False),
-                    repeats=3, warmup=1)),
+             measured(lambda: cluster_batch(Xb, k=4, config=cfg,
+                                            fused=True), repeats=3),
+             measured(lambda: cluster_batch(Xb, k=4, config=cfg,
+                                            fused=False), repeats=3)),
     ]
-    return emit(rows, ["name", "us_per_call", "derived",
-                       "t_fused", "t_staged"])
+    return emit(rows, ["name", "us_per_call", "derived", "t_fused",
+                       "t_staged", "compile_s", "run_s",
+                       "replay_recompiles"])
 
 
 if __name__ == "__main__":

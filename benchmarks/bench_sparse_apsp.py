@@ -38,7 +38,8 @@ from repro.core import sparse_dbht
 from repro.core.config import PipelineConfig
 from repro.core.pipeline import cluster
 from repro.kernels.sparse_apsp import csr_from_edges
-from .common import emit, live_bytes, stage_cost, timeit
+from repro.obs import trace as obs_trace
+from .common import emit, live_bytes, measured, stage_cost, timeit
 
 LARGE_N_BASE = 50_000
 LARGE_N_BUDGET_S = 120.0
@@ -101,11 +102,11 @@ def run(scale: float = 1.0):
         graph = csr_from_edges(n, jnp.asarray(edges), jnp.asarray(w_len))
         graph = jax.block_until_ready(graph)
 
-        t_sparse, b_sparse = stage_cost(
+        t_sparse, b_sparse, c_sparse = stage_cost(
             lambda: A.hub_factor_sparse(graph)[1])
         W = jnp.asarray(_dense_lengths(n, edges, w_sim))
-        t_hub, b_hub = stage_cost(lambda: A.apsp_hub(W))
-        t_exact, _ = stage_cost(lambda: A.apsp_exact(W))
+        t_hub, b_hub, c_hub = stage_cost(lambda: A.apsp_hub(W))
+        t_exact, _, c_exact = stage_cost(lambda: A.apsp_exact(W))
         b_dense = b_hub + int(W.nbytes)        # estimate + its W operand
 
         if n >= STRICT_MIN_N:
@@ -121,6 +122,8 @@ def run(scale: float = 1.0):
                     f"{b_dense / max(b_sparse, 1):.1f}x",
             t_sparse=f"{t_sparse:.4f}", t_hub=f"{t_hub:.4f}",
             t_exact=f"{t_exact:.4f}",
+            compile_s=f"{c_sparse + c_hub + c_exact:.3f}",
+            run_s=f"{t_sparse:.4f}",
             bytes_sparse=b_sparse, bytes_dense=b_dense,
         ))
 
@@ -128,44 +131,49 @@ def run(scale: float = 1.0):
     n = max(24, int(round(500 * scale)))
     tm, w_sim = synth_tmfg(n, seed=7)
     S = sparse_dbht.tmfg_adj_sim(n, tm.edges, w_sim)
-    t_e2e_sparse = timeit(lambda: cluster(
+    m_sparse = measured(lambda: cluster(
         S=S, config=PipelineConfig(apsp_method="sparse", topk=0)),
-        repeats=2, warmup=1)
-    t_e2e_dense = timeit(lambda: cluster(
-        S=S, config=PipelineConfig(topk=0), fused=False),
-        repeats=2, warmup=1)
+        repeats=2)
+    m_dense = measured(lambda: cluster(
+        S=S, config=PipelineConfig(topk=0), fused=False), repeats=2)
+    t_e2e_sparse, t_e2e_dense = m_sparse["run_s"], m_dense["run_s"]
     rows.append(dict(
         name=f"sparse_apsp/e2e/n{n}",
         us_per_call=f"{t_e2e_sparse * 1e6:.0f}",
         derived=f"dense_over_sparse="
                 f"{t_e2e_dense / max(t_e2e_sparse, 1e-9):.2f}x",
         t_sparse=f"{t_e2e_sparse:.4f}", t_hub=f"{t_e2e_dense:.4f}",
+        compile_s=f"{m_sparse['compile_s'] + m_dense['compile_s']:.3f}",
+        run_s=f"{t_e2e_sparse:.4f}",
     ))
 
     # the large-n attempt: full sparse tail, time-boxed, halving from
     # 50k·scale down to whatever fits the budget
     n_try = max(64, int(round(LARGE_N_BASE * scale)))
     while True:
-        tm, w_sim = synth_tmfg(n_try, seed=1)
-        graph = jax.block_until_ready(csr_from_edges(
-            n_try, jnp.asarray(tm.edges),
-            jnp.asarray(np.sqrt(np.maximum(
-                2.0 * (1.0 - np.clip(w_sim, -1, 1)), 0.0)), jnp.float32)))
-        t0 = time.perf_counter()
-        _, D_h = jax.block_until_ready(
-            A.hub_factor_sparse(graph, n_hubs=LARGE_N_HUBS))
-        t_factor = time.perf_counter() - t0
-        b_factor = live_bytes()
-        # probe one warm panel; project the sweep
-        bm = min(sparse_dbht.PANEL_ROWS, n_try)
-        B = tm.bubble_parent.shape[0]
-        fn = sparse_dbht._panel_fn(LARGE_N_HUBS, n_try, bm, B, 1)
-        args = (D_h, graph.rows, graph.cols, graph.vals,
-                jnp.asarray(tm.bubble_verts),
-                jnp.zeros((B,), jnp.int32), jnp.zeros((n_try,), jnp.int32))
-        jax.block_until_ready(fn(*args, 0))                # compile
-        t_panel = timeit(
-            lambda: jax.block_until_ready(fn(*args, 0)), repeats=1)
+        with obs_trace.watch_recompiles() as w:
+            tm, w_sim = synth_tmfg(n_try, seed=1)
+            graph = jax.block_until_ready(csr_from_edges(
+                n_try, jnp.asarray(tm.edges),
+                jnp.asarray(np.sqrt(np.maximum(
+                    2.0 * (1.0 - np.clip(w_sim, -1, 1)), 0.0)),
+                    jnp.float32)))
+            t0 = time.perf_counter()
+            _, D_h = jax.block_until_ready(
+                A.hub_factor_sparse(graph, n_hubs=LARGE_N_HUBS))
+            t_factor = time.perf_counter() - t0
+            b_factor = live_bytes()
+            # probe one warm panel; project the sweep
+            bm = min(sparse_dbht.PANEL_ROWS, n_try)
+            B = tm.bubble_parent.shape[0]
+            fn = sparse_dbht._panel_fn(LARGE_N_HUBS, n_try, bm, B, 1)
+            args = (D_h, graph.rows, graph.cols, graph.vals,
+                    jnp.asarray(tm.bubble_verts),
+                    jnp.zeros((B,), jnp.int32),
+                    jnp.zeros((n_try,), jnp.int32))
+            jax.block_until_ready(fn(*args, 0))            # compile
+            t_panel = timeit(
+                lambda: jax.block_until_ready(fn(*args, 0)), repeats=1)
         projected = t_factor + t_panel * math.ceil(n_try / bm) * 2.0
         if projected <= LARGE_N_BUDGET_S or n_try <= 1024:
             t0 = time.perf_counter()
@@ -178,6 +186,8 @@ def run(scale: float = 1.0):
                 us_per_call=f"{t_total * 1e6:.0f}",
                 derived=f"live_factor_bytes={b_factor}",
                 t_sparse=f"{t_total:.2f}",
+                compile_s=f"{w.compile_s:.3f}",
+                run_s=f"{t_total:.3f}",
                 bytes_sparse=b_factor,
                 n_reached=n_try,
                 linkage_rows=res.linkage.shape[0],
@@ -188,11 +198,14 @@ def run(scale: float = 1.0):
             us_per_call="",
             derived=f"SKIPPED:projected={projected:.0f}s"
                     f">{LARGE_N_BUDGET_S:.0f}s",
+            compile_s=f"{w.compile_s:.3f}",
+            run_s=f"{t_panel:.4f}",
         ))
         n_try //= 2
 
     return emit(rows, ["name", "us_per_call", "derived", "t_sparse",
-                       "t_hub", "t_exact", "bytes_sparse", "bytes_dense",
+                       "t_hub", "t_exact", "compile_s", "run_s",
+                       "bytes_sparse", "bytes_dense",
                        "n_reached", "linkage_rows"])
 
 

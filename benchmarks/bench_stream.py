@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.pipeline import cluster
 from repro.kernels import ops
 from repro.stream import ClusterService
+from repro.obs import trace as obs_trace
 from repro.stream.window import (materialize, window_init, window_push,
                                  window_similarity)
 from .common import emit, timeit
@@ -33,20 +34,23 @@ def _window_rows(scale: float, ticks: int = 32):
     rng = np.random.default_rng(0)
     X = rng.normal(size=(n, L + ticks)).astype(np.float32)
 
-    st = window_init(n, L)
-    for t in range(L):
-        st = window_push(st, X[:, t])
-    jax.block_until_ready(st.s2)
-
     # steady-state per-tick cost: push + similarity read, averaged
-    holder = {"st": st, "t": L}
+    holder = {"t": L}
 
     def one_tick():
         s = window_push(holder["st"], X[:, holder["t"] % X.shape[1]])
         holder["st"], holder["t"] = s, holder["t"] + 1
         return jax.block_until_ready(window_similarity(s))
 
-    t_inc = timeit(one_tick, repeats=ticks, warmup=2)
+    with obs_trace.watch_recompiles() as w_compile:
+        st = window_init(n, L)
+        for t in range(L):
+            st = window_push(st, X[:, t])
+        jax.block_until_ready(st.s2)
+        holder["st"] = st
+        one_tick(); one_tick()             # warm the similarity read too
+    with obs_trace.watch_recompiles() as w_replay:
+        t_inc = timeit(one_tick, repeats=ticks)
 
     W = jnp.asarray(materialize(holder["st"]))
     t_scratch = timeit(lambda: jax.block_until_ready(ops.pearson(W)),
@@ -56,6 +60,9 @@ def _window_rows(scale: float, ticks: int = 32):
         us_per_call=f"{t_inc * 1e6:.0f}",
         derived=f"speedup={t_scratch / max(t_inc, 1e-9):.2f}",
         t_tick=f"{t_inc:.5f}", t_scratch=f"{t_scratch:.5f}",
+        compile_s=f"{w_compile.compile_s:.3f}",
+        run_s=f"{t_inc:.5f}",
+        replay_recompiles=w_replay.count,
         ticks_per_s=f"{1.0 / max(t_inc, 1e-9):.0f}",
     )], t_inc, t_scratch
 
@@ -67,23 +74,27 @@ def _service_rows(scale: float, ticks: int = 96, every: int = 16):
     X, _ = make_dataset(n, L + ticks, 4, noise=0.7, seed=1)
     import time as _time
 
+    from repro.obs import trace as obs_trace
+
     def run_service(**kw):
         svc = ClusterService(n=n, window=L, k=4, variant="opt",
                              recluster_every=every, **kw)
         # warm-up: fill the window and take one recluster so jit compile
         # cost (paid once per deployment) stays out of the steady state
-        for t in range(L):
-            svc.tick(X[:, t])
-        svc.recluster()
+        with obs_trace.watch_recompiles() as w:
+            for t in range(L):
+                svc.tick(X[:, t])
+            svc.recluster()
         t0 = _time.perf_counter()
         for t in range(L, L + ticks):
             req = svc.tick(X[:, t])
             if req is not None and not req.done:
                 svc.drain()
-        return svc, _time.perf_counter() - t0
+        return svc, _time.perf_counter() - t0, w.compile_s
 
-    svc, t_svc = run_service()
-    svc_w, t_warm = run_service(reuse_threshold=0.0, tmfg_threshold=0.05)
+    svc, t_svc, c_svc = run_service()
+    svc_w, t_warm, c_warm = run_service(reuse_threshold=0.0,
+                                        tmfg_threshold=0.05)
     n_reclusters = max(1, ticks // every)
 
     # from-scratch baseline: full cluster() at the same cadence (warmed)
@@ -94,17 +105,19 @@ def _service_rows(scale: float, ticks: int = 96, every: int = 16):
         cluster(X[:, end - L:end], k=4, variant="opt")
     t_base = _time.perf_counter() - t0
 
-    def row(tag, svc_i, t):
+    def row(tag, svc_i, t, c):
         return dict(
             name=f"stream/{tag}", n=n, L=L,
             us_per_call=f"{t / ticks * 1e6:.0f}",
             derived=f"recluster_speedup={t_base / max(t, 1e-9):.2f}",
             ticks_per_s=f"{ticks / max(t, 1e-9):.0f}",
             t_service=f"{t:.3f}", t_scratch=f"{t_base:.3f}",
+            compile_s=f"{c:.3f}", run_s=f"{t / ticks:.5f}",
             reclusters=n_reclusters, warm_hits=svc_i.warm_hits,
         )
 
-    return [row("service", svc, t_svc), row("service-warm", svc_w, t_warm)]
+    return [row("service", svc, t_svc, c_svc),
+            row("service-warm", svc_w, t_warm, c_warm)]
 
 
 def run(scale: float = 1.0):
@@ -112,6 +125,7 @@ def run(scale: float = 1.0):
     rows = w_rows + _service_rows(scale)
     out = emit(rows, ["name", "n", "L", "us_per_call", "derived",
                       "ticks_per_s", "t_tick", "t_scratch", "t_service",
+                      "compile_s", "run_s", "replay_recompiles",
                       "reclusters", "warm_hits"])
     assert t_inc < t_scratch, (
         f"incremental tick ({t_inc:.5f}s) must beat from-scratch "

@@ -3,13 +3,17 @@
 Reports wall time per variant (PAR-TDBHT-{1,10,200}, CORR, HEAP, OPT) and
 the headline speedup OPT vs PAR-10 (the paper measures 3.7–10.7x on 48
 cores; on this 1-core container the *work* reduction — lazy pops and the
-single up-front scan — is what shows up)."""
+single up-front scan — is what shows up).  Per-variant times are
+compile-corrected (wall minus the leg's device-true backend-compile
+seconds, DESIGN.md §15.2), so the variant comparison is run time, not
+whose program lowers slower."""
 
 from __future__ import annotations
 
 import jax
 
 from repro.core.pipeline import cluster
+from repro.obs import trace as obs_trace
 from .common import emit, load_bench_datasets, timeit
 
 
@@ -17,21 +21,25 @@ def run(scale: float = 1.0, variants=("par-1", "par-10", "par-200", "corr",
                                       "heap", "opt")):
     rows = []
     for ds in load_bench_datasets(scale):
-        times = {}
+        times, compile_s = {}, 0.0
         for v in variants:
             def go(v=v):
                 res = cluster(ds["X"], k=ds["k"], variant=v)
                 jax.block_until_ready(res.tmfg.edge_sum)
-            times[v] = timeit(go, repeats=1)
+            with obs_trace.watch_recompiles() as w:
+                wall = timeit(go, repeats=1)
+            times[v] = max(wall - w.compile_s, 0.0)
+            compile_s += w.compile_s
         speedup = times.get("par-10", 0) / max(times.get("opt", 1e-9), 1e-9)
         rows.append(dict(
             name=f"fig2/{ds['name']}", n=ds["n"],
             us_per_call=f"{times['opt'] * 1e6:.0f}",
             derived=f"opt_vs_par10_speedup={speedup:.2f}",
+            compile_s=f"{compile_s:.3f}", run_s=f"{times['opt']:.4f}",
             **{f"t_{k}": f"{t:.3f}" for k, t in times.items()},
         ))
-    return emit(rows, ["name", "n", "us_per_call", "derived"]
-                + [f"t_{v}" for v in variants])
+    return emit(rows, ["name", "n", "us_per_call", "derived", "compile_s",
+                       "run_s"] + [f"t_{v}" for v in variants])
 
 
 if __name__ == "__main__":

@@ -47,6 +47,40 @@ def timeit(fn: Callable, *, repeats: int = 1, warmup: int = 0) -> float:
     return best
 
 
+def measured(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> Dict:
+    """Compile-vs-run split of one benchmark leg (DESIGN.md §15.2).
+
+    The first (cold) call pays XLA compilation; the warm repeats are
+    pure replay.  Measuring them separately is what fixed the BENCH_5
+    false regression (hub APSP "losing" to exact was compile time), so
+    every bench row now carries the split:
+
+      ``run_s``             best fenced wall time over the warm repeats
+      ``compile_s``         device-true backend-compile seconds of the
+                            cold call (the jax.monitoring listener's
+                            accounting, not a wall-clock guess)
+      ``cold_s``            cold-call wall time (compile + first run)
+      ``compiles``          XLA programs the cold call lowered
+      ``replay_recompiles`` programs compiled during the WARM repeats —
+                            0 unless something re-specializes per call
+                            (the ``--check-schema`` CI gate pins this)
+    """
+    import jax
+
+    from repro.obs import trace as obs_trace
+
+    with obs_trace.watch_recompiles() as w:
+        t0 = time.perf_counter()
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn())
+        cold = time.perf_counter() - t0
+    with obs_trace.watch_recompiles() as w_replay:
+        best = timeit(lambda: jax.block_until_ready(fn()), repeats=repeats)
+        replay = w_replay.count
+    return dict(run_s=best, compile_s=w.compile_s, cold_s=cold,
+                compiles=w.count, replay_recompiles=replay)
+
+
 def live_bytes() -> int:
     """Total bytes held by live device arrays (the §13/§14 memory rows)."""
     import jax
@@ -56,17 +90,21 @@ def live_bytes() -> int:
 
 
 def stage_cost(fn):
-    """(best wall time, live bytes the stage's outputs keep alive)."""
+    """(best warm wall time, live bytes the stage's outputs keep alive,
+    device-true compile seconds of the cold call) — DESIGN.md §15.2."""
     import jax
 
-    out = jax.block_until_ready(fn())      # warm: compile outside timing
+    from repro.obs import trace as obs_trace
+
+    with obs_trace.watch_recompiles() as w:
+        out = jax.block_until_ready(fn())  # warm: compile outside timing
     t = timeit(lambda: jax.block_until_ready(fn()), repeats=3)
     del out                                # drop the warm outputs first
     before = live_bytes()
     out = jax.block_until_ready(fn())
     held = live_bytes() - before
     del out
-    return t, max(held, 0)
+    return t, max(held, 0), w.compile_s
 
 
 def emit(rows: List[Dict], header: List[str]):

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig2,...]
                                             [--strict] [--json out.json]
+                                            [--check-schema]
 
 Prints ``name,us_per_call,derived`` CSV per section (plus section-specific
 columns).  Sections:
@@ -20,6 +21,14 @@ columns).  Sections:
 ``--strict`` turns section failures into a nonzero exit code (CI);
 ``--json`` writes every section's rows to one JSON file (the CI
 artifact).  Without ``--strict`` failures print and the run continues.
+
+``--check-schema`` enforces the observability row contract (DESIGN.md
+§15.4): every row of every run section carries a non-empty
+``compile_s`` and ``run_s`` (the compile-vs-run split that fixed the
+BENCH_5 false regression), and any ``replay_recompiles`` field is 0 —
+a warm replay leg that compiles is the §15.2 watchdog's failure mode
+surfacing in CI.  Roofline is exempt (a dry-run table with no timed
+legs), as are rows reporting a failed/skipped leg.
 """
 
 from __future__ import annotations
@@ -47,6 +56,32 @@ SECTIONS = {
     "roofline": lambda scale: roofline.run(),
 }
 
+# dry-run tables with no timed legs — nothing to split (DESIGN.md §15.4)
+SCHEMA_EXEMPT = {"roofline"}
+
+
+def check_schema(results) -> list:
+    """The §15.4 row contract; returns a list of violation strings."""
+    bad = []
+    for section, rows in results.items():
+        if section in SCHEMA_EXEMPT or not isinstance(rows, list):
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                continue
+            derived = str(row.get("derived", ""))
+            if "FAILED" in derived or "SKIPPED" in derived:
+                continue                   # the leg never ran warm
+            where = f"{section}[{i}] ({row.get('name', '?')})"
+            for field in ("compile_s", "run_s"):
+                if str(row.get(field, "")).strip() == "":
+                    bad.append(f"{where}: missing {field}")
+            rr = row.get("replay_recompiles", 0)
+            if int(rr or 0) != 0:
+                bad.append(f"{where}: replay_recompiles={rr} (want 0 — "
+                           f"a warm replay leg compiled)")
+    return bad
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -58,6 +93,10 @@ def main(argv=None) -> int:
                     help="exit nonzero when any requested section fails")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write section rows as JSON to PATH")
+    ap.add_argument("--check-schema", action="store_true",
+                    help="fail unless every run row carries the "
+                         "compile_s/run_s split and every "
+                         "replay_recompiles field is 0 (DESIGN.md §15.4)")
     args = ap.parse_args(argv)
 
     only = [s for s in args.only.split(",") if s] or list(SECTIONS)
@@ -84,6 +123,15 @@ def main(argv=None) -> int:
             json.dump({"scale": args.scale, "sections": results,
                        "failed": failed}, f, indent=2, default=str)
         print(f"# wrote {args.json}", file=sys.stderr)
+
+    if args.check_schema:
+        bad = check_schema(results)
+        for b in bad:
+            print(f"# SCHEMA: {b}", file=sys.stderr)
+        if bad:
+            print(f"# SCHEMA: {len(bad)} violation(s)", file=sys.stderr)
+            return 1
+        print("# SCHEMA: ok", file=sys.stderr)
 
     if failed:
         print(f"# FAILED sections: {','.join(failed)}", file=sys.stderr)

@@ -49,11 +49,28 @@ import jax.numpy as jnp
 
 from repro.dist import sharding as dist_sh
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 import repro.core.apsp as apsp_mod
 import repro.core.dbht as dbht_mod
 import repro.core.jitcache as jitcache
 from .config import PipelineConfig, VARIANTS  # noqa: F401  (re-export)
 from .tmfg import TMFGResult, adjacency_from_weights, build_tmfg
+
+
+def _observe_stage(stage: str, seconds: float) -> None:
+    """Per-stage latency into the process-global registry (DESIGN.md
+    §15.3); the staged path's spans feed it, so `ClusterService.stats()`
+    exports the same numbers `ClusterResult.timings` reports."""
+    obs_metrics.histogram("pipeline_stage_seconds",
+                          "staged-path per-stage latency (fenced)",
+                          stage=stage).observe(seconds)
+
+
+def _observe_total(path: str, seconds: float) -> None:
+    obs_metrics.histogram("pipeline_total_seconds",
+                          "end-to-end cluster()/cluster_batch() latency",
+                          path=path).observe(seconds)
 
 
 @dataclass
@@ -196,9 +213,20 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
         one = _fused_one(config, is_similarity)
         return jax.jit(jax.vmap(one) if batched else one)
 
-    fn = jitcache.cached(
-        ("fused", config, is_similarity, batched, arr.shape), build)
-    return fn(arr)
+    key = ("fused", config, is_similarity, batched, arr.shape)
+    # the runtime recompile watchdog (DESIGN.md §15.2): a key already in
+    # the executable cache is a REPLAY — if XLA compiles a new program
+    # under it anyway, that is the BENCH_5 failure mode happening in
+    # production, and it is alarmed, not silently paid
+    replay = jitcache.contains(key)
+    fn = jitcache.cached(key, build)
+    before = obs_trace.compile_stats()["programs"]
+    out = fn(arr)
+    if replay and obs_trace.compile_stats()["programs"] > before:
+        obs_trace.record_recompile(
+            detail="replayed fused executable lowered a new program",
+            shape=str(arr.shape), batched=batched)
+    return out
 
 
 def _result_from_fused(host: DeviceOutputs, b: Optional[int] = None,
@@ -284,19 +312,24 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             "APSP+DBHT tail is host-orchestrated by design, §14.6)")
 
     if fused:
-        t0 = time.perf_counter()
-        if S is not None:
-            arr, have_S = jnp.asarray(S, jnp.float32), True
-        elif moments is not None:
-            from repro.stream.window import window_similarity  # no cycle
-            arr, have_S = window_similarity(moments), True
-        else:
-            assert X is not None, "need X, S or moments"
-            arr, have_S = jnp.asarray(np.asarray(X), jnp.float32), False
-        out = run_pipeline_device(arr, cfg, is_similarity=have_S,
-                                  batched=False)
-        host = jax.device_get(out)
-        timings = {"total": time.perf_counter() - t0}
+        # fence=False: the fused path's one device_get IS its sync —
+        # the span adds no block_until_ready (the §15.1 zero-cost
+        # contract, pinned by tests/test_obs.py), and its duration is
+        # device-true anyway because the transfer waits for the program
+        with obs_trace.span("pipeline.fused", fence=False) as sp:
+            if S is not None:
+                arr, have_S = jnp.asarray(S, jnp.float32), True
+            elif moments is not None:
+                from repro.stream.window import window_similarity  # no cycle
+                arr, have_S = window_similarity(moments), True
+            else:
+                assert X is not None, "need X, S or moments"
+                arr, have_S = jnp.asarray(np.asarray(X), jnp.float32), False
+            out = run_pipeline_device(arr, cfg, is_similarity=have_S,
+                                      batched=False)
+            host = jax.device_get(out)
+        _observe_total("fused", sp.duration)
+        timings = {"total": sp.duration}
         return _result_from_fused(
             host, k=k, timings=timings if collect_timings else None)
 
@@ -309,79 +342,95 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             "which only exist materialized (DESIGN.md §13)")
     timings = {}
     table = counters = None
-    t0 = time.perf_counter()
-    if S is None and moments is not None:
-        from repro.stream.window import window_similarity  # no import cycle
-        S = jax.block_until_ready(window_similarity(moments))
-    elif S is None and not approx:
-        assert X is not None, "need X, S or moments"
-        S = similarity_from_timeseries(np.asarray(X), backend=cfg.backend)
-        S = jax.block_until_ready(S)
-    elif S is not None:
-        S = jnp.asarray(S, dtype=jnp.float32)
-    if approx and reuse_tmfg is None:
-        # sparse-similarity stage (DESIGN.md §13.2): an (n, sim_k)
-        # candidate table instead of the (n, n) matrix — cut from S
-        # when one is already materialized (stream windows), else
-        # streamed straight from the series without ever building S
-        from repro.approx import knn as approx_knn  # lazy: no import cycle
-        if S is not None:
-            kk = min(cfg.sim_k, S.shape[0] - 1)
-            table, Zn = approx_knn.topk_from_similarity(S, kk), None
-        else:
+    # each stage is one fenced span (DESIGN.md §15.1): ``sp.fence``
+    # block_until_ready's the stage's device outputs at the boundary,
+    # so the recorded splits measure device work, not async dispatch —
+    # and they sum to ``total`` (pinned by tests/test_pipeline.py)
+    with obs_trace.span("pipeline.similarity", fence=True) as sp_sim:
+        if S is None and moments is not None:
+            from repro.stream.window import window_similarity  # no cycle
+            S = sp_sim.fence(window_similarity(moments))
+        elif S is None and not approx:
             assert X is not None, "need X, S or moments"
-            X_j = jnp.asarray(np.asarray(X), jnp.float32)
-            kk = min(cfg.sim_k, X_j.shape[0] - 1)
-            table, Zn = approx_knn.topk_pearson_and_z(
-                X_j, kk, backend=cfg.backend)
-        table = jax.block_until_ready(table)
-    timings["similarity"] = time.perf_counter() - t0
+            S = similarity_from_timeseries(np.asarray(X),
+                                           backend=cfg.backend)
+            S = sp_sim.fence(S)
+        elif S is not None:
+            S = jnp.asarray(S, dtype=jnp.float32)
+        if approx and reuse_tmfg is None:
+            # sparse-similarity stage (DESIGN.md §13.2): an (n, sim_k)
+            # candidate table instead of the (n, n) matrix — cut from S
+            # when one is already materialized (stream windows), else
+            # streamed straight from the series without ever building S
+            from repro.approx import knn as approx_knn  # no import cycle
+            if S is not None:
+                kk = min(cfg.sim_k, S.shape[0] - 1)
+                table, Zn = approx_knn.topk_from_similarity(S, kk), None
+            else:
+                assert X is not None, "need X, S or moments"
+                X_j = jnp.asarray(np.asarray(X), jnp.float32)
+                kk = min(cfg.sim_k, X_j.shape[0] - 1)
+                table, Zn = approx_knn.topk_pearson_and_z(
+                    X_j, kk, backend=cfg.backend)
+            table = sp_sim.fence(table)
+    timings["similarity"] = sp_sim.duration
 
-    t0 = time.perf_counter()
-    w_edges = None
-    if reuse_tmfg is not None:
-        tm = reuse_tmfg
-    elif approx and cfg.method == "lazy":
-        # the sparse gain scan (DESIGN.md §13.3); the recorded per-edge
-        # weights become the weighted adjacency the DBHT stage gathers
-        # from, so S is never needed downstream either
-        from repro.approx import sparse_tmfg as approx_tmfg
-        tm, w_edges, counters = approx_tmfg.build_tmfg_sparse(
-            table, Xn=Zn, S=S)
-        tm = jax.block_until_ready(tm)
-        if S is None and cfg.apsp_method != "sparse":
-            # the sparse APSP tail consumes w_edges directly (DESIGN.md
-            # §14.3); every other method needs the dense adjacency
-            S = adjacency_from_weights(
-                tm.edges.shape[0] // 3 + 2, tm.edges, w_edges)
-    elif approx:
-        # non-lazy methods scan whole similarity rows per round; they
-        # run on the DENSIFIED sparsification (missing entries floored
-        # below the Pearson range) — exact at sim_k = n-1, O(n²) again
-        # (the lazy method is the memory-saving path; DESIGN.md §13.3)
-        from repro.approx import knn as approx_knn
-        S = approx_knn.densify(table, n=table.indices.shape[0])
-        tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
-                        topk=cfg.topk)
-        tm = jax.block_until_ready(tm)
-    else:
-        tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
-                        topk=cfg.topk)
-        tm = jax.block_until_ready(tm)
-    timings["tmfg"] = time.perf_counter() - t0
+    with obs_trace.span("pipeline.tmfg", fence=True) as sp_tmfg:
+        w_edges = None
+        if reuse_tmfg is not None:
+            tm = reuse_tmfg
+        elif approx and cfg.method == "lazy":
+            # the sparse gain scan (DESIGN.md §13.3); the recorded
+            # per-edge weights become the weighted adjacency the DBHT
+            # stage gathers from, so S is never needed downstream either
+            from repro.approx import sparse_tmfg as approx_tmfg
+            tm, w_edges, counters = approx_tmfg.build_tmfg_sparse(
+                table, Xn=Zn, S=S)
+            tm = sp_tmfg.fence(tm)
+            if S is None and cfg.apsp_method != "sparse":
+                # the sparse APSP tail consumes w_edges directly
+                # (DESIGN.md §14.3); other methods need the adjacency
+                S = adjacency_from_weights(
+                    tm.edges.shape[0] // 3 + 2, tm.edges, w_edges)
+        elif approx:
+            # non-lazy methods scan whole similarity rows per round;
+            # they run on the DENSIFIED sparsification (missing entries
+            # floored below the Pearson range) — exact at sim_k = n-1,
+            # O(n²) again (lazy is the memory-saving path; §13.3)
+            from repro.approx import knn as approx_knn
+            S = approx_knn.densify(table, n=table.indices.shape[0])
+            tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
+                            topk=cfg.topk)
+            tm = sp_tmfg.fence(tm)
+        else:
+            tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
+                            topk=cfg.topk)
+            tm = sp_tmfg.fence(tm)
+    timings["tmfg"] = sp_tmfg.duration
 
-    t0 = time.perf_counter()
-    res = dbht_mod.dbht(S, tm, config=cfg, impl=cfg.dbht_impl,
-                        edge_weights=w_edges)
-    timings["dbht+apsp"] = time.perf_counter() - t0
+    with obs_trace.span("pipeline.dbht+apsp", fence=True) as sp_dbht:
+        res = dbht_mod.dbht(S, tm, config=cfg, impl=cfg.dbht_impl,
+                            edge_weights=w_edges)
+        sp_dbht.fence(res.linkage)
+    timings["dbht+apsp"] = sp_dbht.duration
     timings["total"] = sum(timings.values())
-    if approx and collect_timings and counters is not None:
+    for stage in ("similarity", "tmfg", "dbht+apsp"):
+        _observe_stage(stage, timings[stage])
+    _observe_total("staged", timings["total"])
+    if approx and counters is not None:
         # fallback/recall diagnostics of the sparse construction
-        # (DESIGN.md §13.3) ride the timings dict
+        # (DESIGN.md §13.3) ride the timings dict AND the registry
+        # (§15.3) — the counters are tiny scalars already materialized
+        # behind the tmfg fence
         lk, fb = int(counters.lookups), int(counters.fallbacks)
-        timings["sim_fallbacks"] = float(fb)
-        timings["sim_fallback_rate"] = fb / max(lk, 1)
-        timings["sim_pair_misses"] = float(int(counters.pair_misses))
+        pm = int(counters.pair_misses)
+        obs_metrics.counter("approx_lookups_total").inc(lk)
+        obs_metrics.counter("approx_fallbacks_total").inc(fb)
+        obs_metrics.counter("approx_pair_misses_total").inc(pm)
+        if collect_timings:
+            timings["sim_fallbacks"] = float(fb)
+            timings["sim_fallback_rate"] = fb / max(lk, 1)
+            timings["sim_pair_misses"] = float(pm)
 
     kk = k if k is not None else len(res.converging)
     labels = res.labels(kk)
@@ -533,7 +582,6 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
             "host-orchestrated by design, §14.6)")
 
     timings: Dict[str, float] = {}
-    t_start = time.perf_counter()
     if S is None:
         assert X is not None, "need X or S"
         arr, have_S = jnp.asarray(X, dtype=jnp.float32), False
@@ -553,12 +601,16 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         arr = jax.device_put(arr, dist_sh.batch_shardings(mesh, arr))
 
     if fused:
-        out = run_pipeline_device(arr, cfg, is_similarity=have_S,
-                                  batched=True)
-        # ONE transfer, sliced to B_out first so pad entries of a
-        # bucketed micro-batch never cross the boundary
-        host = jax.device_get(jax.tree.map(lambda a: a[:B_out], out))
-        total = time.perf_counter() - t_start
+        # unfenced span (§15.1): the sliced device_get is the one sync
+        with obs_trace.span("pipeline.fused", fence=False,
+                            batch=B) as sp:
+            out = run_pipeline_device(arr, cfg, is_similarity=have_S,
+                                      batched=True)
+            # ONE transfer, sliced to B_out first so pad entries of a
+            # bucketed micro-batch never cross the boundary
+            host = jax.device_get(jax.tree.map(lambda a: a[:B_out], out))
+        total = sp.duration
+        _observe_total("fused", total)
         per = {"total": total / B}
         results = [
             _result_from_fused(host, b=b, k=k,
@@ -570,107 +622,122 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
             timings=timings if collect_timings else {})
 
     # ---- staged path (DESIGN.md §12.4) ----------------------------------
+    # same fenced-span structure as single-matrix cluster() (§15.1):
+    # stage splits are device-true and sum to "total"
     approx = cfg.similarity == "topk"
-    t0 = time.perf_counter()
-    table_b = src_b = None
-    if approx:
-        kk = min(cfg.sim_k, arr.shape[1] - 1)
-        table_b, src_b = _batched_approx_tables(arr, have_S, kk,
-                                                cfg.backend)
-        table_b = jax.block_until_ready(table_b)
-        S_b = arr if have_S else None
-    elif have_S:
-        S_b = arr
-    else:
-        S_b = jax.block_until_ready(_batched_similarity(arr, cfg.backend))
-    timings["similarity"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    counters_b = w_b = None
-    if approx and cfg.method == "lazy":
-        # vmapped sparse gain scan (DESIGN.md §13.3); when built from X
-        # the per-edge weights scatter into the weighted adjacency so
-        # the batch never materializes a (B, n, n) similarity — and for
-        # the sparse APSP tail they are consumed directly (§14.6)
-        tm_b, w_b, counters_b = _batched_sparse_tmfg(
-            not have_S, table_b, S_b if have_S else src_b)
-        tm_b = jax.block_until_ready(tm_b)
-        if S_b is None and cfg.apsp_method != "sparse":
-            n = arr.shape[1]
-            adj = jitcache.cached(
-                ("approx_adj", tm_b.edges.shape),
-                lambda: jax.jit(jax.vmap(
-                    lambda e, w: adjacency_from_weights(n, e, w))))
-            S_b = adj(tm_b.edges, w_b)
-    elif approx:
-        from repro.approx import knn as approx_knn  # lazy: no import cycle
-        n = arr.shape[1]
-        dense = jitcache.cached(
-            ("approx_densify", table_b.indices.shape),
-            lambda: jax.jit(jax.vmap(
-                lambda v, i: approx_knn._densify(v, i, n))))
-        S_b = dense(table_b.values, table_b.indices)
-        tm_b = jax.block_until_ready(
-            _batched_tmfg(cfg.method, cfg.prefix, cfg.topk,
-                          S_b.shape)(S_b))
-    else:
-        tm_b = jax.block_until_ready(
-            _batched_tmfg(cfg.method, cfg.prefix, cfg.topk,
-                          S_b.shape)(S_b))
-    timings["tmfg"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    if cfg.dbht_impl == "device":
-        # the whole DBHT stage for the batch is ONE vmapped jitted
-        # program plus one device→host transfer (DESIGN.md §11.4)
-        dbs = dbht_mod.dbht_batch(S_b, tm_b, config=cfg, limit=B_out,
-                                  edge_weights=w_b)
-        t_dbht = time.perf_counter() - t0
-    else:
-        dbs, t_dbht = None, 0.0
-        # S_b is None only on the sparse-tail approx path, where the
-        # per-edge weights stand in for the similarity (DESIGN.md §14.6)
-        S_host = None if S_b is None else np.asarray(S_b[:B_out])
-        w_host = None if w_b is None else np.asarray(w_b[:B_out])
-    # ONE transfer, not B x leaves — sliced to B_out first so pad
-    # entries of a bucketed micro-batch never cross the boundary
-    tm_host = jax.device_get(jax.tree.map(lambda a: a[:B_out], tm_b))
-    results: List[ClusterResult] = []
-    for b in range(B_out):
-        t_b = time.perf_counter()
-        tm = jax.tree.map(lambda a, b=b: a[b], tm_host)
-        if dbs is not None:
-            res = dbs[b]
+    with obs_trace.span("pipeline.similarity", fence=True,
+                        batch=B) as sp_sim:
+        table_b = src_b = None
+        if approx:
+            kk = min(cfg.sim_k, arr.shape[1] - 1)
+            table_b, src_b = _batched_approx_tables(arr, have_S, kk,
+                                                    cfg.backend)
+            table_b = sp_sim.fence(table_b)
+            S_b = arr if have_S else None
+        elif have_S:
+            S_b = arr
         else:
-            res = dbht_mod.dbht(
-                None if S_host is None else S_host[b], tm, config=cfg,
-                impl="host",
-                edge_weights=None if w_host is None else w_host[b])
-        kk = k if k is not None else len(res.converging)
-        # per-result timings: the batched device stages (and the batched
-        # device DBHT) amortize evenly over the B entries; the host-side
-        # DBHT walk, when selected, is measured per b
-        per = {"similarity": timings["similarity"] / B,
-               "tmfg": timings["tmfg"] / B,
-               "dbht+apsp": (t_dbht / B + (time.perf_counter() - t_b)
-                             if dbs is not None
-                             else time.perf_counter() - t_b)}
-        per["total"] = sum(per.values())
-        results.append(ClusterResult(
-            labels=res.labels(kk), linkage=res.linkage, tmfg=tm, dbht=res,
-            edge_sum=float(tm.edge_sum),
-            timings=per if collect_timings else {}))
-    timings["dbht+apsp"] = time.perf_counter() - t0
+            S_b = sp_sim.fence(_batched_similarity(arr, cfg.backend))
+    timings["similarity"] = sp_sim.duration
+
+    with obs_trace.span("pipeline.tmfg", fence=True, batch=B) as sp_tmfg:
+        counters_b = w_b = None
+        if approx and cfg.method == "lazy":
+            # vmapped sparse gain scan (DESIGN.md §13.3); when built from
+            # X the per-edge weights scatter into the weighted adjacency
+            # so the batch never materializes a (B, n, n) similarity —
+            # and for the sparse APSP tail they are consumed directly
+            # (§14.6)
+            tm_b, w_b, counters_b = _batched_sparse_tmfg(
+                not have_S, table_b, S_b if have_S else src_b)
+            tm_b = sp_tmfg.fence(tm_b)
+            if S_b is None and cfg.apsp_method != "sparse":
+                n = arr.shape[1]
+                adj = jitcache.cached(
+                    ("approx_adj", tm_b.edges.shape),
+                    lambda: jax.jit(jax.vmap(
+                        lambda e, w: adjacency_from_weights(n, e, w))))
+                S_b = adj(tm_b.edges, w_b)
+        elif approx:
+            from repro.approx import knn as approx_knn  # no import cycle
+            n = arr.shape[1]
+            dense = jitcache.cached(
+                ("approx_densify", table_b.indices.shape),
+                lambda: jax.jit(jax.vmap(
+                    lambda v, i: approx_knn._densify(v, i, n))))
+            S_b = dense(table_b.values, table_b.indices)
+            tm_b = sp_tmfg.fence(
+                _batched_tmfg(cfg.method, cfg.prefix, cfg.topk,
+                              S_b.shape)(S_b))
+        else:
+            tm_b = sp_tmfg.fence(
+                _batched_tmfg(cfg.method, cfg.prefix, cfg.topk,
+                              S_b.shape)(S_b))
+    timings["tmfg"] = sp_tmfg.duration
+
+    with obs_trace.span("pipeline.dbht+apsp", fence=True,
+                        batch=B) as sp_dbht:
+        t0 = time.perf_counter()
+        if cfg.dbht_impl == "device":
+            # the whole DBHT stage for the batch is ONE vmapped jitted
+            # program plus one device→host transfer (DESIGN.md §11.4)
+            dbs = dbht_mod.dbht_batch(S_b, tm_b, config=cfg, limit=B_out,
+                                      edge_weights=w_b)
+            t_dbht = time.perf_counter() - t0
+        else:
+            dbs, t_dbht = None, 0.0
+            # S_b is None only on the sparse-tail approx path, where the
+            # per-edge weights stand in for the similarity (§14.6)
+            S_host = None if S_b is None else np.asarray(S_b[:B_out])
+            w_host = None if w_b is None else np.asarray(w_b[:B_out])
+        # ONE transfer, not B x leaves — sliced to B_out first so pad
+        # entries of a bucketed micro-batch never cross the boundary
+        tm_host = jax.device_get(jax.tree.map(lambda a: a[:B_out], tm_b))
+        results: List[ClusterResult] = []
+        for b in range(B_out):
+            t_b = time.perf_counter()
+            tm = jax.tree.map(lambda a, b=b: a[b], tm_host)
+            if dbs is not None:
+                res = dbs[b]
+            else:
+                res = dbht_mod.dbht(
+                    None if S_host is None else S_host[b], tm, config=cfg,
+                    impl="host",
+                    edge_weights=None if w_host is None else w_host[b])
+            kk = k if k is not None else len(res.converging)
+            # per-result timings: the batched device stages (and the
+            # batched device DBHT) amortize evenly over the B entries;
+            # the host-side DBHT walk, when selected, is measured per b
+            per = {"similarity": timings["similarity"] / B,
+                   "tmfg": timings["tmfg"] / B,
+                   "dbht+apsp": (t_dbht / B + (time.perf_counter() - t_b)
+                                 if dbs is not None
+                                 else time.perf_counter() - t_b)}
+            per["total"] = sum(per.values())
+            results.append(ClusterResult(
+                labels=res.labels(kk), linkage=res.linkage, tmfg=tm,
+                dbht=res, edge_sum=float(tm.edge_sum),
+                timings=per if collect_timings else {}))
+    timings["dbht+apsp"] = sp_dbht.duration
     timings["total"] = sum(timings.values())
-    if approx and collect_timings and counters_b is not None:
-        # batch-summed fallback/recall diagnostics (DESIGN.md §13.3);
-        # added after "total" so they never count as wall time
+    for stage in ("similarity", "tmfg", "dbht+apsp"):
+        _observe_stage(stage, timings[stage])
+    _observe_total("staged", timings["total"])
+    if approx and counters_b is not None:
+        # batch-summed fallback/recall diagnostics (DESIGN.md §13.3)
+        # feed the registry unconditionally and — when asked — ride the
+        # timings dict, added after "total" so they never count as wall
+        # time
+        lk = float(np.sum(np.asarray(counters_b.lookups)))
         fb = float(np.sum(np.asarray(counters_b.fallbacks)))
-        timings["sim_fallbacks"] = fb
-        timings["sim_fallback_rate"] = fb / max(
-            float(np.sum(np.asarray(counters_b.lookups))), 1.0)
-        timings["sim_pair_misses"] = float(np.sum(
-            np.asarray(counters_b.pair_misses)))
+        pm = float(np.sum(np.asarray(counters_b.pair_misses)))
+        obs_metrics.counter("approx_lookups_total").inc(lk)
+        obs_metrics.counter("approx_fallbacks_total").inc(fb)
+        obs_metrics.counter("approx_pair_misses_total").inc(pm)
+        if collect_timings:
+            timings["sim_fallbacks"] = fb
+            timings["sim_fallback_rate"] = fb / max(lk, 1.0)
+            timings["sim_pair_misses"] = pm
 
     return BatchClusterResult(
         labels=np.stack([r.labels for r in results]), results=results,

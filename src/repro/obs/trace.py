@@ -1,0 +1,320 @@
+"""Span-based device-true tracer + recompile watchdog (DESIGN.md §15.1).
+
+The repo's timing story used to be five scattered ``time.perf_counter()``
+dicts, and it shipped a false regression because of it: BENCH_5 "showed"
+hub APSP losing to exact when the bench was really timing XLA
+compilation (fixed in PR 6), and the staged pipeline's stage splits
+measured async dispatch.  This module is the one timing primitive
+everything else now routes through:
+
+* :func:`span` — a nestable, thread-safe timing context.  Spans always
+  measure (callers read ``sp.duration`` to populate e.g.
+  ``ClusterResult.timings``); they are *collected* into the global
+  trace buffer only while tracing is enabled (:func:`enable` /
+  :func:`tracing`), so the buffer costs nothing in steady state.
+* device-true fencing — ``sp.fence(x)`` calls ``jax.block_until_ready``
+  on ``x`` when the span was opened with ``fence=True``, so the
+  recorded duration covers device *execution*, not dispatch.  A span
+  opened with ``fence=False`` never syncs: the fused pipeline's
+  zero-extra-sync contract (DESIGN.md §15.1) is pinned by a
+  no-``block_until_ready`` test in tests/test_obs.py.
+* compile-vs-run separation (DESIGN.md §15.2) — a persistent
+  ``jax.monitoring`` listener counts every XLA backend compile and its
+  duration.  Each span records the compiles that happened inside it
+  (``sp.compiles`` / ``sp.compile_s``; ``sp.run_s`` is the remainder),
+  :func:`watch_recompiles` watches a region (the benchmarks' replay
+  legs assert ``count == 0``), and :func:`record_recompile` is the
+  runtime watchdog's alarm: the pipeline calls it whenever a *replayed*
+  (config, shape) executable lowers a new program — the event lands in
+  an always-on bounded log surfaced by ``ClusterService.healthz()``.
+
+The listener itself is registered once at import and does work only
+when XLA actually compiles, so the whole module is zero-cost on the
+steady-state hot path.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+
+# the jax.monitoring event XLA emits once per backend compilation; its
+# duration is the device-true compile cost of that one program
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.RLock()
+_local = threading.local()          # per-thread active-span stack
+
+_enabled = False
+_records: List["Span"] = []         # completed spans, append order
+_events: List[Dict[str, Any]] = []  # trace events (only while enabled)
+_MAX_RECORDS = 65536                # hard cap: tracing never grows unbounded
+
+# cumulative compile counters (always on; fed by the monitoring listener)
+_compile_count = 0
+_compile_secs = 0.0
+
+# the runtime recompile watchdog's alarm log: replayed (config, shape)
+# executables that lowered a NEW program anyway.  Always on, bounded.
+_recompile_log: "deque[Dict[str, Any]]" = deque(maxlen=1024)
+_recompile_count = 0
+
+
+def _on_compile_event(event: str, duration: float, **kwargs) -> None:
+    global _compile_count, _compile_secs
+    if event != _COMPILE_EVENT:
+        return
+    with _lock:
+        _compile_count += 1
+        _compile_secs += duration
+
+
+_registered = False
+
+
+def _ensure_listener() -> None:
+    global _registered
+    if _registered:
+        return
+    _registered = True
+    from jax._src import monitoring
+    monitoring.register_event_duration_secs_listener(_on_compile_event)
+
+
+_ensure_listener()
+
+
+# ---------------------------------------------------------------------------
+# spans (§15.1)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Span:
+    """One completed (or active) timing span."""
+
+    name: str
+    fenced: bool = False
+    depth: int = 0
+    parent: Optional[str] = None
+    thread: int = 0
+    start: float = 0.0
+    duration: float = 0.0           # wall seconds, fenced when ``fenced``
+    compiles: int = 0               # XLA programs compiled inside the span
+    compile_s: float = 0.0          # their summed backend-compile seconds
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def run_s(self) -> float:
+        """Duration with the span's compile time subtracted — the
+        steady-state cost a warm replay would pay (DESIGN.md §15.2)."""
+        return max(self.duration - self.compile_s, 0.0)
+
+    def fence(self, x):
+        """Block until ``x``'s device computation finishes — but only
+        when the span was opened with ``fence=True``; an unfenced span
+        adds NO device sync.  Returns ``x`` either way."""
+        if self.fenced and x is not None:
+            jax.block_until_ready(x)
+        return x
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(kind="span", name=self.name, depth=self.depth,
+                    parent=self.parent, thread=self.thread,
+                    start=self.start, duration=self.duration,
+                    fenced=self.fenced, compiles=self.compiles,
+                    compile_s=self.compile_s, run_s=self.run_s,
+                    **({"attrs": self.attrs} if self.attrs else {}))
+
+
+def _stack() -> List[Span]:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+@contextmanager
+def span(name: str, *, fence: bool = False, **attrs):
+    """Time a region; nestable and thread-safe (each thread keeps its
+    own stack).  The span object is yielded so callers can read
+    ``sp.duration`` / ``sp.run_s`` afterwards and ``sp.fence(value)``
+    device outputs at stage boundaries (DESIGN.md §15.1).
+
+    Spans always measure; they are appended to the global trace buffer
+    only while tracing is :func:`enable`\\ d."""
+    st = _stack()
+    sp = Span(name=name, fenced=fence, depth=len(st),
+              parent=st[-1].name if st else None,
+              thread=threading.get_ident(), attrs=dict(attrs))
+    with _lock:
+        c0, s0 = _compile_count, _compile_secs
+    st.append(sp)
+    sp.start = time.perf_counter()
+    try:
+        yield sp
+    finally:
+        sp.duration = time.perf_counter() - sp.start
+        st.pop()
+        with _lock:
+            # cross-thread compiles can leak into the delta; single-
+            # threaded callers (every current caller) see exact counts
+            sp.compiles = _compile_count - c0
+            sp.compile_s = _compile_secs - s0
+            if _enabled and len(_records) < _MAX_RECORDS:
+                _records.append(sp)
+
+
+# ---------------------------------------------------------------------------
+# enable/disable + buffer access
+# ---------------------------------------------------------------------------
+
+def enable() -> None:
+    """Start collecting spans/events into the trace buffer."""
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+@contextmanager
+def tracing():
+    """Scoped :func:`enable` (the usual way to take a trace)."""
+    global _enabled
+    prev, _enabled = _enabled, True
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def spans(name: Optional[str] = None) -> List[Span]:
+    """Snapshot of collected spans (optionally filtered by name)."""
+    with _lock:
+        out = list(_records)
+    return out if name is None else [s for s in out if s.name == name]
+
+
+def events(name: Optional[str] = None) -> List[Dict[str, Any]]:
+    with _lock:
+        out = list(_events)
+    return out if name is None else [e for e in out if e["name"] == name]
+
+
+def record_event(name: str, **attrs) -> None:
+    """Append an instantaneous event to the trace buffer (collected
+    only while tracing is enabled)."""
+    if not _enabled:
+        return
+    with _lock:
+        if len(_events) < _MAX_RECORDS:
+            _events.append(dict(kind="event", name=name,
+                                t=time.perf_counter(), **attrs))
+
+
+def clear() -> None:
+    """Drop collected spans/events (compile counters are cumulative;
+    see :func:`watch_recompiles` for windowed readings)."""
+    with _lock:
+        _records.clear()
+        _events.clear()
+
+
+# ---------------------------------------------------------------------------
+# compile counters + the recompile watchdog (§15.2)
+# ---------------------------------------------------------------------------
+
+def compile_stats() -> Dict[str, float]:
+    """Cumulative process-wide XLA compile counters (always on)."""
+    with _lock:
+        return {"programs": _compile_count, "compile_s": _compile_secs,
+                "recompile_events": _recompile_count}
+
+
+class _Watch:
+    """View over a watched region's compile activity: live while the
+    ``with`` block is open, frozen at its deltas once the block exits
+    (so compiles that happen *after* the region never leak into a
+    reading taken later — e.g. a baseline timed right after a replay
+    watch)."""
+
+    def __init__(self):
+        with _lock:
+            self._c0, self._s0 = _compile_count, _compile_secs
+            self._r0 = _recompile_count
+        self._end = None                 # (count, secs, recompiles) caps
+
+    def _freeze(self) -> None:
+        with _lock:
+            self._end = (_compile_count, _compile_secs, _recompile_count)
+
+    def _now(self, i: int):
+        if self._end is not None:
+            return self._end[i]
+        with _lock:
+            return (_compile_count, _compile_secs, _recompile_count)[i]
+
+    @property
+    def count(self) -> int:
+        """XLA programs compiled inside the watched region."""
+        return self._now(0) - self._c0
+
+    @property
+    def compile_s(self) -> float:
+        return self._now(1) - self._s0
+
+    @property
+    def recompile_events(self) -> int:
+        """Watchdog *alarms* (replayed executables that compiled) inside
+        the region — distinct from first-time compiles."""
+        return self._now(2) - self._r0
+
+
+@contextmanager
+def watch_recompiles():
+    """Watch a region for XLA compilation (DESIGN.md §15.2).
+
+    ``with watch_recompiles() as w: ...`` — afterwards (or live inside)
+    ``w.count``/``w.compile_s`` report the programs compiled in the
+    region and their device-true compile seconds; the deltas freeze
+    when the block exits.  A replay leg at a fixed (config, shape) must
+    report ``w.count == 0``; the benchmarks' ``--check-schema`` CI gate
+    asserts exactly that."""
+    w = _Watch()
+    try:
+        yield w
+    finally:
+        w._freeze()
+
+
+def record_recompile(detail: str = "", **attrs) -> None:
+    """The runtime watchdog's alarm (DESIGN.md §15.2): called by the
+    pipeline when a REPLAYED (config, shape) executable lowered a new
+    XLA program anyway — i.e. the bounded jitcache hit but XLA still
+    compiled, which a healthy steady-state service must never see.
+    Always recorded (bounded log), independent of tracing."""
+    global _recompile_count
+    with _lock:
+        _recompile_count += 1
+        _recompile_log.append(dict(kind="event", name="recompile",
+                                   t=time.perf_counter(), detail=detail,
+                                   **attrs))
+    record_event("recompile", detail=detail, **attrs)
+
+
+def recompile_events() -> List[Dict[str, Any]]:
+    """Snapshot of the watchdog's (bounded) alarm log."""
+    with _lock:
+        return list(_recompile_log)

@@ -27,6 +27,8 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 
 def content_key(S, config: Tuple) -> str:
     """Digest of the similarity matrix bytes + the static config tuple
@@ -40,13 +42,25 @@ def content_key(S, config: Tuple) -> str:
 
 
 class ResultCache:
-    """Content-hash LRU over ClusterResults.  ``maxsize<=0`` disables."""
+    """Content-hash LRU over ClusterResults.  ``maxsize<=0`` disables.
+
+    Hit/miss/eviction counts also land in the process-global metrics
+    registry (``stream_cache_*`` counters, DESIGN.md §15.3) — every
+    instance reports into the same family, the way a multi-tenant
+    service aggregates — while the per-instance ``hits``/``misses``
+    attributes keep their pre-§15 meaning."""
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self._d: "OrderedDict[str, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self._m_hits = obs_metrics.counter(
+            "stream_cache_hits_total", "content-hash LRU hits")
+        self._m_misses = obs_metrics.counter(
+            "stream_cache_misses_total", "content-hash LRU misses")
+        self._m_evict = obs_metrics.counter(
+            "stream_cache_evictions_total", "content-hash LRU evictions")
 
     def __len__(self) -> int:
         return len(self._d)
@@ -55,8 +69,10 @@ class ResultCache:
         if key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
+            self._m_hits.inc()
             return self._d[key]
         self.misses += 1
+        self._m_misses.inc()
         return None
 
     def peek(self, key: str):
@@ -75,6 +91,7 @@ class ResultCache:
         self._d.move_to_end(key)
         while len(self._d) > self.maxsize:
             self._d.popitem(last=False)
+            self._m_evict.inc()
 
 
 class WarmStart:

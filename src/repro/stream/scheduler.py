@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import jitcache, pipeline
 from repro.core.config import ConfigFields, PipelineConfig
+from repro.obs import metrics as obs_metrics
 
 
 _UIDS = itertools.count()
@@ -116,6 +117,26 @@ class MicroBatcher:
         self.queue: List[ClusterRequest] = []
         self.batches_run = 0
         self.requests_run = 0
+        # flush-level dedupe: requests resolved at flush time WITHOUT
+        # pipeline work — the cache re-probe (``peek``) answers plus
+        # same-flush duplicate matrices resolved from their twin.  The
+        # caller-facing cache stats deliberately skip the re-probe
+        # (each request counts once, at submit), so without this
+        # counter flush dedupe was invisible (DESIGN.md §15.3).
+        self.dedup_hits = 0
+        self.flushes = 0
+        self.pad_slots = 0                 # pad entries ever stacked
+        self.batch_slots = 0               # total stacked slots (incl. pads)
+        # occupancy instruments in the process-global registry
+        self._m_queue = obs_metrics.gauge(
+            "batcher_queue_depth", "requests waiting for a flush")
+        self._m_flush = obs_metrics.histogram(
+            "batcher_flush_size", "real requests per flushed chunk",
+            buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0))
+        self._m_pad = obs_metrics.gauge(
+            "batcher_pad_waste_ratio", "pad slots / stacked slots, lifetime")
+        self._m_dedup = obs_metrics.counter(
+            "batcher_dedup_hits_total", "requests deduped at flush time")
 
     def __len__(self) -> int:
         return len(self.queue)
@@ -135,6 +156,7 @@ class MicroBatcher:
         req = ClusterRequest(uid=next(_UIDS),
                              S=np.asarray(S, dtype=np.float32), k=k, cfg=cfg)
         self.queue.append(req)
+        self._m_queue.set(len(self.queue))
         return req
 
     @staticmethod
@@ -166,6 +188,15 @@ class MicroBatcher:
                 S=stack, k=r0.k, config=r0.cfg, mesh=self.mesh, limit=B)
             self.batches_run += 1
             self.requests_run += B
+            # occupancy telemetry (DESIGN.md §15.3): how full this
+            # bucket ran, and the lifetime share of padded-away slots
+            self.pad_slots += pad_to - B
+            self.batch_slots += pad_to
+            self._m_flush.observe(float(B))
+            self._m_pad.set(self.pad_slots / max(self.batch_slots, 1))
+            obs_metrics.gauge("batcher_bucket_occupancy",
+                              "last fill fraction of this bucket size",
+                              bucket=str(pad_to)).set(B / pad_to)
             for r, res in zip(chunk, bres.results):   # pads drop here
                 r.result, r.done = res, True
                 if self.cache is not None:
@@ -187,16 +218,20 @@ class MicroBatcher:
         silently re-clustered (or double-resolved) by a later flush.
         """
         out, self.queue = self.queue, []
+        self.flushes += 1
+        self._m_queue.set(0)
         dedupe = self.cache is not None and self.cache.maxsize > 0
         todo: List[ClusterRequest] = []
         first: Dict[str, ClusterRequest] = {}
         dups: List[ClusterRequest] = []
+        probe_hits = 0
         for r in out:
             if dedupe:
                 ck = self._content_key(r)
                 hit = self.cache.peek(ck)
                 if hit is not None:
                     r.result, r.done, r.cached = hit, True, True
+                    probe_hits += 1
                     continue
                 if ck in first:
                     dups.append(r)         # resolved from its twin below
@@ -213,4 +248,8 @@ class MicroBatcher:
         for r in dups:
             twin = first[r.ck]
             r.result, r.done, r.cached = twin.result, True, True
+        saved = probe_hits + len(dups)
+        if saved:
+            self.dedup_hits += saved
+            self._m_dedup.inc(saved)
         return out

@@ -24,12 +24,15 @@ reuse and TMFG reuse — are opt-in.
 
 from __future__ import annotations
 
-from typing import List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core import pipeline
+from repro.core import jitcache, pipeline
 from repro.core.config import ConfigFields, PipelineConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from .cache import ResultCache, WarmStart, content_key
 from .scheduler import ClusterRequest, MicroBatcher
 from .window import WindowState, window_init, window_push, window_similarity
@@ -70,6 +73,13 @@ class ClusterService(ConfigFields):
         self.latest: Optional[pipeline.ClusterResult] = None
         self._warm_k: Optional[int] = None
         self.warm_hits = 0
+        # per-tick latency lands in the process-global registry
+        # (DESIGN.md §15.3); tick() is the service's hottest entry
+        # point, so the histogram's O(#buckets) observe is all it pays
+        self._m_tick = obs_metrics.histogram(
+            "service_tick_seconds", "per-tick co-moment update latency")
+        self._m_warm = obs_metrics.counter(
+            "service_warm_hits_total", "requests answered by a warm tier")
         # kwarg-era accessors (svc.method/prefix/...) come from the
         # ConfigFields mixin, delegating to self.cfg
 
@@ -78,15 +88,18 @@ class ClusterService(ConfigFields):
         """Ingest one (n,) observation; O(n²).  Auto-submits a recluster
         of the current window every ``recluster_every`` ticks once
         ``min_ticks`` observations have arrived (0 disables)."""
+        t0 = time.perf_counter()
         self.state = window_push(self.state, np.asarray(x, np.float32))
         self.ticks += 1
         # host-side fill tracking — reading state.count would sync the device
         filled = min(self.ticks, self.state.capacity)
+        out = None
         if (self.recluster_every > 0
                 and filled >= self.min_ticks
                 and self.ticks % self.recluster_every == 0):
-            return self.submit()
-        return None
+            out = self.submit()
+        self._m_tick.observe(time.perf_counter() - t0)
+        return out
 
     def similarity(self) -> np.ndarray:
         """Current window's (n, n) Pearson matrix from the co-moments."""
@@ -121,6 +134,7 @@ class ClusterService(ConfigFields):
                     reused_tmfg=payload.reused_tmfg)
             req.result, req.done, req.cached = res, True, True
             self.warm_hits += 1
+            self._m_warm.inc()
             self.latest = res
             return req
         if tier == "tmfg":
@@ -128,6 +142,7 @@ class ClusterService(ConfigFields):
                                    config=self.cfg)
             req.result, req.done = res, True
             self.warm_hits += 1
+            self._m_warm.inc()
             # warm-tier results feed the LRU too: a repeated window must
             # hit the cache even after the warm state has moved on
             self.cache.put(content_key(S, req.config), res)
@@ -172,3 +187,48 @@ class ClusterService(ConfigFields):
         # when a later request asks for a different k
         self._warm_k = k if k is not None else len(res.dbht.converging)
         self.latest = res
+
+    # -- observability (DESIGN.md §15.3) ------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """One registry snapshot of everything the serving tier exports:
+        jitcache hit/miss/eviction + size, content-cache (LRU) hits and
+        misses, batcher occupancy (queue depth, flush sizes, pad waste,
+        per-bucket fill), the per-stage pipeline latency histograms and
+        the per-tick service latency — plus the service's own local
+        counters under ``service_*`` keys.  Keys are Prometheus sample
+        names (``repro.obs.export.render`` emits the same registry as
+        text)."""
+        snap = obs_metrics.snapshot()
+        snap.update({
+            "service_ticks": float(self.ticks),
+            "service_queue_depth": float(len(self.batcher)),
+            "service_cache_entries": float(len(self.cache)),
+            "service_warm_hits": float(self.warm_hits),
+            "service_batches_run": float(self.batcher.batches_run),
+            "service_dedup_hits": float(self.batcher.dedup_hits),
+        })
+        return snap
+
+    def healthz(self) -> Dict[str, Any]:
+        """Liveness/readiness probe (DESIGN.md §15.3).
+
+        Contract (pinned by tests/test_obs.py): always returns the keys
+        ``status`` (``"warming"`` until the window holds ``min_ticks``
+        observations, then ``"ok"``), ``ready`` (bool mirror),
+        ``ticks``, ``window_filled``, ``window_capacity``,
+        ``queue_depth``, ``recompile_events`` (the §15.2 watchdog's
+        cumulative alarm count — a healthy steady-state service shows
+        0), and ``jitcache_size``."""
+        filled = min(self.ticks, self.state.capacity)
+        ready = filled >= self.min_ticks
+        return {
+            "status": "ok" if ready else "warming",
+            "ready": ready,
+            "ticks": self.ticks,
+            "window_filled": filled,
+            "window_capacity": self.state.capacity,
+            "queue_depth": len(self.batcher),
+            "recompile_events": obs_trace.compile_stats()[
+                "recompile_events"],
+            "jitcache_size": jitcache.size(),
+        }

@@ -41,6 +41,7 @@ def test_design_md_exists_and_has_sections():
                  "12", "12.1", "12.2", "12.3", "12.4",
                  "13", "13.1", "13.2", "13.3", "13.4", "13.5",
                  "14", "14.1", "14.2", "14.3", "14.4", "14.5", "14.6",
+                 "15", "15.1", "15.2", "15.3", "15.4",
                  "Arch-applicability"):
         assert must in sections, f"DESIGN.md lost §{must}"
 
@@ -84,6 +85,30 @@ def test_sparse_apsp_sections_are_cited_from_code():
     refs = _cited_refs()
     for sub in ("14", "14.1", "14.2", "14.3", "14.4", "14.5", "14.6"):
         assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_obs_sections_are_cited_from_code():
+    """§15's spec stays honest the same way (ISSUE 7): the span tracer
+    and fencing contract, the compile counters + recompile watchdog,
+    the metrics registry and the export/row-schema layer must each be
+    cited from at least one docstring in src/tests/benchmarks."""
+    refs = _cited_refs()
+    for sub in ("15", "15.1", "15.2", "15.3", "15.4"):
+        assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_readme_and_api_document_obs():
+    """The observability layer stays documented: docs/api.md covers
+    `repro.obs` (spans, the watch, the registry, the exporters) and
+    docs/benchmarks.md records the compile_s/run_s row schema that
+    --check-schema gates in CI."""
+    api = (ROOT / "docs" / "api.md").read_text()
+    assert "repro.obs" in api
+    for name in ("watch_recompiles", "compile_s", "snapshot",
+                 "healthz", "dump_jsonl"):
+        assert name in api, f"docs/api.md lost {name}"
+    bench = (ROOT / "docs" / "benchmarks.md").read_text()
+    assert "--check-schema" in bench and "replay_recompiles" in bench
 
 
 def test_readme_and_api_document_approx():
