@@ -14,6 +14,7 @@ columns).  Sections:
   apsp  exact vs hub APSP              (bench_apsp)
   sparse  sparse APSP factor + DBHT tail scaling (bench_sparse_apsp)
   stream  streaming window + service   (bench_stream)
+  load  mixed-tenant admission overload drive (bench_load)
   pipeline  fused vs staged latency    (bench_pipeline)
   approx  dense vs top-K similarity    (bench_approx)
   roofline  dry-run roofline table     (roofline; needs results/dryrun)
@@ -28,7 +29,11 @@ artifact).  Without ``--strict`` failures print and the run continues.
 BENCH_5 false regression), and any ``replay_recompiles`` field is 0 —
 a warm replay leg that compiles is the §15.2 watchdog's failure mode
 surfacing in CI.  Roofline is exempt (a dry-run table with no timed
-legs), as are rows reporting a failed/skipped leg.
+legs), as are rows reporting a failed/skipped leg.  ``load`` rows
+additionally must carry the §16.4 serving columns — ``shed_total`` and
+``degraded_total`` present, ``lost_ticks`` exactly 0 — so an admission
+regression (silent tick loss, an overload drive that never sheds)
+fails CI the same way a recompile does.
 """
 
 from __future__ import annotations
@@ -39,8 +44,9 @@ import sys
 import time
 
 from . import (bench_approx, bench_apsp, bench_ari, bench_breakdown,
-               bench_edgesum, bench_pipeline, bench_sparse_apsp,
-               bench_speedup, bench_stream, bench_tmfg, roofline)
+               bench_edgesum, bench_load, bench_pipeline,
+               bench_sparse_apsp, bench_speedup, bench_stream,
+               bench_tmfg, roofline)
 
 SECTIONS = {
     "fig2": lambda scale: bench_tmfg.run(scale),
@@ -51,6 +57,7 @@ SECTIONS = {
     "apsp": lambda scale: bench_apsp.run(scale),
     "sparse": lambda scale: bench_sparse_apsp.run(scale),
     "stream": lambda scale: bench_stream.run(scale),
+    "load": lambda scale: bench_load.run(scale),
     "pipeline": lambda scale: bench_pipeline.run(scale),
     "approx": lambda scale: bench_approx.run(scale),
     "roofline": lambda scale: roofline.run(),
@@ -80,6 +87,17 @@ def check_schema(results) -> list:
             if int(rr or 0) != 0:
                 bad.append(f"{where}: replay_recompiles={rr} (want 0 — "
                            f"a warm replay leg compiled)")
+            if section == "load":
+                # the §16.4 serving contract: overload rows must show
+                # their shed/degraded accounting and zero tick loss
+                for field in ("shed_total", "degraded_total"):
+                    if str(row.get(field, "")).strip() == "":
+                        bad.append(f"{where}: missing {field} (§16.4 "
+                                   f"serving column)")
+                lt = row.get("lost_ticks", "")
+                if str(lt).strip() == "" or int(lt or 0) != 0:
+                    bad.append(f"{where}: lost_ticks={lt!r} (want 0 — "
+                               f"overload must never drop ingestion)")
     return bad
 
 

@@ -55,7 +55,10 @@ def render(registry: Optional[_metrics.Registry] = None) -> str:
     lines.extend(sample_lines)
     for line in sorted(collector_lines):
         lines.append(line)
-    return "\n".join(lines) + "\n"
+    # an empty registry renders as the empty string, not a stray
+    # newline — scrapes of a fresh process must be byte-clean (pinned
+    # by tests/test_obs.py)
+    return "\n".join(lines) + "\n" if lines else ""
 
 
 def _num(v: float) -> str:

@@ -232,6 +232,16 @@ class Registry:
         return {name + _labels_str(labels): value
                 for name, labels, value in self.collect()}
 
+    def family_total(self, name: str) -> float:
+        """Sum of one counter/gauge family across every label set —
+        e.g. ``family_total("admission_shed_total")`` is total sheds
+        regardless of reason (the §16 serving rollup the load bench
+        reports).  Histograms are excluded (summing bucket samples is
+        meaningless); an unknown family sums to 0.0."""
+        with self._lock:
+            ms = [m for (n, _), m in self._metrics.items() if n == name]
+        return float(sum(m.value for m in ms if hasattr(m, "value")))
+
     def reset(self) -> None:
         """Zero every owned instrument (collectors are external views;
         reset those at their source)."""
@@ -253,3 +263,4 @@ histogram = REGISTRY.histogram
 register_collector = REGISTRY.register_collector
 snapshot = REGISTRY.snapshot
 reset = REGISTRY.reset
+family_total = REGISTRY.family_total

@@ -52,6 +52,7 @@ _lock = threading.RLock()
 _local = threading.local()          # per-thread active-span stack
 
 _enabled = False
+_tracing_depth = 0                  # open tracing() sessions, all threads
 _records: List["Span"] = []         # completed spans, append order
 _events: List[Dict[str, Any]] = []  # trace events (only while enabled)
 _MAX_RECORDS = 65536                # hard cap: tracing never grows unbounded
@@ -166,7 +167,7 @@ def span(name: str, *, fence: bool = False, **attrs):
             # threaded callers (every current caller) see exact counts
             sp.compiles = _compile_count - c0
             sp.compile_s = _compile_secs - s0
-            if _enabled and len(_records) < _MAX_RECORDS:
+            if (_enabled or _tracing_depth) and len(_records) < _MAX_RECORDS:
                 _records.append(sp)
 
 
@@ -186,18 +187,26 @@ def disable() -> None:
 
 
 def enabled() -> bool:
-    return _enabled
+    return _enabled or _tracing_depth > 0
 
 
 @contextmanager
 def tracing():
-    """Scoped :func:`enable` (the usual way to take a trace)."""
-    global _enabled
-    prev, _enabled = _enabled, True
+    """Scoped :func:`enable` (the usual way to take a trace).
+
+    Sessions are *refcounted*, not save/restored: two threads (or two
+    nested regions) may hold overlapping ``tracing()`` sessions and
+    collection stays on until the LAST one exits — a save/restore of
+    the flag would let the first thread to leave switch tracing off
+    under the one still inside (pinned by tests/test_obs.py)."""
+    global _tracing_depth
+    with _lock:
+        _tracing_depth += 1
     try:
         yield
     finally:
-        _enabled = prev
+        with _lock:
+            _tracing_depth -= 1
 
 
 def spans(name: Optional[str] = None) -> List[Span]:
@@ -216,7 +225,7 @@ def events(name: Optional[str] = None) -> List[Dict[str, Any]]:
 def record_event(name: str, **attrs) -> None:
     """Append an instantaneous event to the trace buffer (collected
     only while tracing is enabled)."""
-    if not _enabled:
+    if not (_enabled or _tracing_depth):
         return
     with _lock:
         if len(_events) < _MAX_RECORDS:

@@ -6,10 +6,16 @@ maintained incrementally in O(n²) per tick (``window``), concurrent
 clustering requests are micro-batched into bucketed ``cluster_batch``
 calls (``scheduler``), and results are cached by content hash with
 warm-start reuse across consecutive windows (``cache``).  ``service``
-ties the parts into the ``ClusterService`` façade.
+ties the parts into the ``ClusterService`` façade.  ``admission`` is
+the production front door (DESIGN.md §16): a bounded idempotent queue,
+per-tenant token-bucket quotas, and a circuit breaker with a degraded
+mode that serves approx/cached/stale results under overload instead of
+collapsing.
 """
 
-from . import cache, scheduler, service, window  # noqa: F401
+from . import admission, cache, scheduler, service, window  # noqa: F401
+from .admission import (AdmissionConfig, AdmissionController,  # noqa: F401
+                        CircuitBreaker, Ticket, TokenBucket)
 from .cache import ResultCache, WarmStart, content_key  # noqa: F401
 from .scheduler import ClusterRequest, MicroBatcher, bucket_size  # noqa: F401
 from .service import ClusterService  # noqa: F401

@@ -55,10 +55,14 @@ class ResultCache:
         self._d: "OrderedDict[str, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.stale_serves = 0
         self._m_hits = obs_metrics.counter(
             "stream_cache_hits_total", "content-hash LRU hits")
         self._m_misses = obs_metrics.counter(
             "stream_cache_misses_total", "content-hash LRU misses")
+        self._m_stale = obs_metrics.counter(
+            "stream_cache_stale_serves_total",
+            "degraded-lane cache serves (DESIGN.md §16.3)")
         self._m_evict = obs_metrics.counter(
             "stream_cache_evictions_total", "content-hash LRU evictions")
 
@@ -81,6 +85,18 @@ class ResultCache:
         already counted."""
         if key in self._d:
             self._d.move_to_end(key)
+            return self._d[key]
+        return None
+
+    def get_stale(self, key: str):
+        """Degraded-lane read (DESIGN.md §16.3): like :meth:`get` but
+        counted separately (``stream_cache_stale_serves_total``), so
+        overload serving does not distort the steady-state hit rate —
+        the statistic capacity decisions are made from."""
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.stale_serves += 1
+            self._m_stale.inc()
             return self._d[key]
         return None
 

@@ -216,7 +216,13 @@ class MicroBatcher:
         mid-flush, the exception propagates with the queue already
         cleared — unresolved requests stay ``done=False`` but are never
         silently re-clustered (or double-resolved) by a later flush.
+
+        An empty queue is a no-op: no flush is counted, no instrument
+        moves (pinned by tests/test_stream.py — a service draining on a
+        timer must not inflate flush statistics while idle).
         """
+        if not self.queue:
+            return []
         out, self.queue = self.queue, []
         self.flushes += 1
         self._m_queue.set(0)

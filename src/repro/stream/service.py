@@ -33,6 +33,7 @@ from repro.core import jitcache, pipeline
 from repro.core.config import ConfigFields, PipelineConfig
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from .admission import AdmissionConfig, AdmissionController, Ticket
 from .cache import ResultCache, WarmStart, content_key
 from .scheduler import ClusterRequest, MicroBatcher
 from .window import WindowState, window_init, window_push, window_similarity
@@ -55,7 +56,9 @@ class ClusterService(ConfigFields):
                  max_batch: int = 8, cache_size: int = 128,
                  reuse_threshold: float = 0.0, tmfg_threshold: float = 0.0,
                  recluster_every: int = 0, min_ticks: Optional[int] = None,
-                 dbht_impl: Optional[str] = None):
+                 dbht_impl: Optional[str] = None,
+                 admission: Optional[AdmissionConfig] = None,
+                 clock=None):
         if config is None and variant is None:
             variant = "opt"                    # the historical default
         self.cfg = PipelineConfig.resolve(
@@ -67,6 +70,16 @@ class ClusterService(ConfigFields):
         self.warm = WarmStart(reuse_threshold, tmfg_threshold)
         self.batcher = MicroBatcher(max_batch=max_batch, mesh=mesh,
                                     cache=self.cache)
+        # production front door (DESIGN.md §16): bounded queue, quotas,
+        # breaker + degraded mode.  Off (None) preserves the synchronous
+        # warm/LRU/batcher path exactly; the clock is injectable so the
+        # fault suite can drive breaker cooldowns without sleeping.
+        self.clock = clock if clock is not None else time.monotonic
+        self.admission: Optional[AdmissionController] = None
+        if admission is not None:
+            self.admission = AdmissionController(
+                batcher=self.batcher, cfg=self.cfg, policy=admission,
+                cache=self.cache, clock=self.clock)
         self.recluster_every = recluster_every
         self.min_ticks = min_ticks if min_ticks is not None else window
         self.ticks = 0
@@ -106,14 +119,40 @@ class ClusterService(ConfigFields):
         return np.asarray(window_similarity(self.state))
 
     # -- request path -------------------------------------------------------
-    def submit(self, S=None, *, k: Optional[int] = None) -> ClusterRequest:
+    def submit(self, S=None, *, k: Optional[int] = None,
+               tenant: str = "default"):
         """Enqueue a clustering request (current window if ``S`` is None).
 
         Warm-start and cache tiers may answer immediately (``req.done``);
-        otherwise the request waits for the next ``drain``.
+        otherwise the request waits for the next ``drain``.  With
+        admission control enabled the request routes through the §16
+        front door instead — quotas, bounded queue, breaker — and the
+        return value is a :class:`~repro.stream.admission.Ticket`
+        (same ``done``/``result``/``cached`` surface, plus the
+        admission ``outcome`` and the ``degraded`` label); ``tenant``
+        selects the quota bucket and is ignored otherwise.
+
+        ``S`` must be the (n, n) similarity matrix of this service's
+        universe.  Anything else — in particular a raw (n, L) series
+        window — is rejected, never silently truncated or reinterpreted;
+        feed observations through :meth:`tick` or reduce the window with
+        ``ops.pearson`` first.
         """
         S = self.similarity() if S is None else np.asarray(S, np.float32)
+        n = self.state.n
+        if S.ndim != 2 or S.shape[0] != S.shape[1] or S.shape[0] != n:
+            raise ValueError(
+                f"submit() needs the ({n}, {n}) similarity matrix of this "
+                f"service's universe, got shape {S.shape}; raw series "
+                "windows are not accepted (and are never truncated) — "
+                "feed observations through tick() or pass "
+                "S=ops.pearson(window)")
         kk = self.k if k is None else k
+        if self.admission is not None:
+            t = self.admission.submit(S, k=kk, tenant=tenant)
+            if t.done and t.result is not None and not t.degraded:
+                self.latest = t.result
+            return t
         # uid=-1 marks "answered without queueing"; req.config is the ONE
         # key schema — (k,) + cfg.content_key(), the same tuple the
         # batcher digests for its LRU and in-flush dedupe, so service-
@@ -161,7 +200,15 @@ class ClusterService(ConfigFields):
         return req
 
     def drain(self) -> List[ClusterRequest]:
-        """Flush the micro-batcher; returns the resolved requests."""
+        """Flush the micro-batcher; returns the resolved requests.  With
+        admission enabled this pumps the §16.1 queue instead (one bucket
+        per call, breaker-accounted) and returns the resolved Tickets."""
+        if self.admission is not None:
+            done: List[Ticket] = self.admission.pump()
+            for t in done:
+                if t.result is not None and not t.degraded:
+                    self._record(t.S, t.result, t.k)
+            return done
         done = self.batcher.flush()
         for r in done:
             if r.result is not None:
@@ -171,6 +218,9 @@ class ClusterService(ConfigFields):
     def recluster(self) -> pipeline.ClusterResult:
         """Synchronous submit+drain of the current window."""
         req = self.submit()
+        while not req.done and self.admission is not None \
+                and len(self.admission.queue) > 0:
+            self.drain()
         if not req.done:
             self.drain()
         return req.result
@@ -207,6 +257,9 @@ class ClusterService(ConfigFields):
             "service_batches_run": float(self.batcher.batches_run),
             "service_dedup_hits": float(self.batcher.dedup_hits),
         })
+        if self.admission is not None:
+            snap.update({f"service_{k}": v
+                         for k, v in self.admission.stats().items()})
         return snap
 
     def healthz(self) -> Dict[str, Any]:
@@ -214,15 +267,25 @@ class ClusterService(ConfigFields):
 
         Contract (pinned by tests/test_obs.py): always returns the keys
         ``status`` (``"warming"`` until the window holds ``min_ticks``
-        observations, then ``"ok"``), ``ready`` (bool mirror),
+        observations, then ``"ok"``; ``"degraded"`` while the §16.3
+        breaker is not closed), ``ready`` (bool mirror),
         ``ticks``, ``window_filled``, ``window_capacity``,
         ``queue_depth``, ``recompile_events`` (the §15.2 watchdog's
         cumulative alarm count — a healthy steady-state service shows
-        0), and ``jitcache_size``."""
+        0), ``jitcache_size`` — plus the §16 serving keys ``breaker``
+        (state string, ``"disabled"`` without admission),
+        ``admission_queue_depth``, ``shed_total`` and
+        ``degraded_total``."""
         filled = min(self.ticks, self.state.capacity)
         ready = filled >= self.min_ticks
+        breaker = "disabled" if self.admission is None \
+            else self.admission.breaker.state
+        status = "ok" if ready else "warming"
+        if breaker not in ("disabled", "closed"):
+            status = "degraded"
+        adm = self.admission
         return {
-            "status": "ok" if ready else "warming",
+            "status": status,
             "ready": ready,
             "ticks": self.ticks,
             "window_filled": filled,
@@ -231,4 +294,8 @@ class ClusterService(ConfigFields):
             "recompile_events": obs_trace.compile_stats()[
                 "recompile_events"],
             "jitcache_size": jitcache.size(),
+            "breaker": breaker,
+            "admission_queue_depth": 0 if adm is None else len(adm),
+            "shed_total": 0 if adm is None else adm.shed_total,
+            "degraded_total": 0 if adm is None else adm.degraded_total,
         }

@@ -1,0 +1,148 @@
+"""Deterministic fault-injection harness for the serving tier (ISSUE 8).
+
+Everything the §16 admission layer does under stress — breaker
+open/half-open/close, quota exhaustion, idempotent replay, degraded
+labeling — is time- or failure-dependent.  This module makes those
+behaviors drivable from fast deterministic tests:
+
+* :class:`FakeClock` — an injectable monotonic clock.  The admission
+  layer takes ``clock=`` everywhere time matters (token refill, breaker
+  cooldown, latency stamps), so a test *advances* time instead of
+  sleeping; the fault suite contains zero ``time.sleep`` calls.
+* :class:`FlakyClusterBatch` / :class:`FlakyCluster` — callable stand-ins
+  for ``pipeline.cluster_batch`` / ``pipeline.cluster`` that raise
+  :class:`InjectedFault` for a scripted number of calls (or forever)
+  and then delegate to the real implementation.  Monkeypatch them over
+  ``repro.stream.scheduler.pipeline.cluster_batch`` (the primary lane)
+  or ``repro.stream.admission.pipeline.cluster`` (the degraded lane).
+* :class:`TenantTraffic` — a seeded mixed-tenant request generator: a
+  fixed pool of similarity matrices and a weighted tenant schedule, so
+  overload scenarios (and their shed/degrade counts) replay bit-for-bit
+  from the seed.
+
+The suite that uses this harness (tests/test_faults.py) is marked
+``faults`` and runs standalone in CI as ``pytest -m faults``.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """The failure the stubs raise — a distinct type, so tests can tell
+    an injected fault from a real pipeline bug."""
+
+
+class FakeClock:
+    """Deterministic monotonic clock: ``clock()`` reads, ``advance``
+    moves.  Never goes backwards."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0.0, f"FakeClock cannot go backwards (dt={dt})"
+        self.t += dt
+        return self.t
+
+
+class _Flaky:
+    """Fail the first ``fail`` calls (or all, if ``forever``), then
+    delegate to ``real``.  Call count and remaining failures are
+    readable so tests can assert exactly how often a lane ran."""
+
+    def __init__(self, real, *, fail: int = 0, forever: bool = False):
+        self.real = real
+        self.fail_remaining = fail
+        self.forever = forever
+        self.calls = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        if self.forever or self.fail_remaining > 0:
+            if not self.forever:
+                self.fail_remaining -= 1
+            raise InjectedFault("injected compute failure")
+        return self.real(*args, **kwargs)
+
+
+class FlakyClusterBatch(_Flaky):
+    """Primary-lane fault: patch over
+    ``repro.stream.scheduler.pipeline.cluster_batch``."""
+
+
+class FlakyCluster(_Flaky):
+    """Degraded-lane fault: patch over
+    ``repro.stream.admission.pipeline.cluster``."""
+
+
+class SlowClusterBatch:
+    """Latency fault: advances an injected :class:`FakeClock` by
+    ``delay`` before delegating — compute that "takes" time without any
+    real waiting, so latency accounting (``Ticket.waited``, the
+    ``admission_wait_seconds`` histogram) is testable deterministically."""
+
+    def __init__(self, real, clock: FakeClock, delay: float):
+        self.real = real
+        self.clock = clock
+        self.delay = float(delay)
+        self.calls = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        self.clock.advance(self.delay)
+        return self.real(*args, **kwargs)
+
+
+def similarity_pool(n: int, pool: int, *, seed: int = 0,
+                    L: int = 48) -> List[np.ndarray]:
+    """``pool`` distinct (n, n) Pearson similarity matrices from one
+    seed — the windows tenant traffic draws from."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(pool):
+        X = rng.normal(size=(n, L)).astype(np.float32)
+        S = np.corrcoef(X).astype(np.float32)
+        np.fill_diagonal(S, 1.0)
+        out.append(S)
+    return out
+
+
+class TenantTraffic:
+    """Seeded mixed-tenant request stream.
+
+    Yields ``(tenant, S)`` pairs: the tenant is drawn from ``tenants``
+    with the given ``weights`` and the window from a fixed
+    :func:`similarity_pool` — duplicates are frequent by construction
+    (``pool`` is small), which is what exercises the idempotent-submit
+    and cache paths under load.  Same seed → same stream, bit for bit.
+    """
+
+    def __init__(self, n: int = 16, *, tenants: Sequence[str] = ("a", "b"),
+                 weights: Optional[Sequence[float]] = None, pool: int = 4,
+                 seed: int = 0, L: int = 48):
+        self.tenants = tuple(tenants)
+        w = np.asarray(weights if weights is not None
+                       else [1.0] * len(self.tenants), dtype=np.float64)
+        self.weights = w / w.sum()
+        self.pool = similarity_pool(n, pool, seed=seed, L=L)
+        self.rng = np.random.default_rng(seed + 1)
+
+    def take(self, m: int) -> List[Tuple[str, np.ndarray]]:
+        out = []
+        for _ in range(m):
+            tenant = self.tenants[
+                int(self.rng.choice(len(self.tenants), p=self.weights))]
+            S = self.pool[int(self.rng.integers(len(self.pool)))]
+            out.append((tenant, S))
+        return out
+
+    def __iter__(self) -> Iterator[Tuple[str, np.ndarray]]:
+        while True:
+            yield self.take(1)[0]

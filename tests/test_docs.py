@@ -42,6 +42,7 @@ def test_design_md_exists_and_has_sections():
                  "13", "13.1", "13.2", "13.3", "13.4", "13.5",
                  "14", "14.1", "14.2", "14.3", "14.4", "14.5", "14.6",
                  "15", "15.1", "15.2", "15.3", "15.4",
+                 "16", "16.1", "16.2", "16.3", "16.4",
                  "Arch-applicability"):
         assert must in sections, f"DESIGN.md lost §{must}"
 
@@ -95,6 +96,30 @@ def test_obs_sections_are_cited_from_code():
     refs = _cited_refs()
     for sub in ("15", "15.1", "15.2", "15.3", "15.4"):
         assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_admission_sections_are_cited_from_code():
+    """§16's spec stays honest the same way (ISSUE 8): the bounded
+    queue + idempotent submit, the per-tenant quotas, the breaker +
+    degraded lane and the load/fault acceptance layer must each be
+    cited from at least one docstring in src/tests/benchmarks."""
+    refs = _cited_refs()
+    for sub in ("16", "16.1", "16.2", "16.3", "16.4"):
+        assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_readme_and_api_document_admission():
+    """The serving front door stays documented: README carries the
+    serving-under-load quickstart (AdmissionConfig + tenant submits +
+    healthz), docs/api.md covers `repro.stream.admission`."""
+    readme = (ROOT / "README.md").read_text()
+    for name in ("AdmissionConfig", "tenant", "healthz"):
+        assert name in readme, f"README lost {name}"
+    api = (ROOT / "docs" / "api.md").read_text()
+    for name in ("repro.stream.admission", "AdmissionConfig",
+                 "CircuitBreaker", "TokenBucket", "Ticket",
+                 "shed_total", "degraded_total"):
+        assert name in api, f"docs/api.md lost {name}"
 
 
 def test_readme_and_api_document_obs():

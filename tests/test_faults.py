@@ -1,0 +1,361 @@
+"""Deterministic fault-injection suite for the §16 serving tier.
+
+Every robustness behavior the admission layer promises — breaker
+open/half-open/close, per-tenant quota exhaustion, idempotent replay,
+degraded-result labeling, bounded-queue shedding — pinned with the
+tests/faults.py harness: an injected :class:`~faults.FakeClock` (zero
+sleeps anywhere in this file), scripted compute failures, and seeded
+tenant traffic.  Marked ``faults``; CI runs it standalone as
+``pytest -m faults`` (see DESIGN.md §16.4).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.stream import (AdmissionConfig, AdmissionController,
+                          CircuitBreaker, ClusterService, TokenBucket)
+from repro.stream import admission as adm_mod
+from repro.stream import scheduler as sched
+
+from faults import (FakeClock, FlakyCluster, FlakyClusterBatch,
+                    InjectedFault, SlowClusterBatch, TenantTraffic,
+                    similarity_pool)
+
+pytestmark = pytest.mark.faults
+
+N = 12          # one universe size for the whole file → jit programs reuse
+POOL = similarity_pool(N, 6, seed=7)
+
+
+def make_svc(clk, **admission_kw):
+    policy = AdmissionConfig(**admission_kw)
+    return ClusterService(n=N, window=48, k=3, max_batch=2,
+                          admission=policy, clock=clk)
+
+
+# ---------------------------------------------------------------------------
+# token bucket (§16.2)
+# ---------------------------------------------------------------------------
+
+class TestTokenBucket:
+    def test_burst_then_refill(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=1.0, burst=2.0, clock=clk)
+        assert b.try_take() and b.try_take()
+        assert not b.try_take()            # burst spent, no time passed
+        clk.advance(1.0)
+        assert b.try_take()                # one token refilled
+        assert not b.try_take()
+        clk.advance(100.0)
+        assert b.try_take() and b.try_take()
+        assert not b.try_take()            # refill caps at burst
+
+    def test_infinite_rate_never_rejects(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=float("inf"), burst=1.0, clock=clk)
+        assert all(b.try_take() for _ in range(100))
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (§16.3) — pure unit, no pipeline
+# ---------------------------------------------------------------------------
+
+class TestCircuitBreaker:
+    def test_opens_after_consecutive_failures_only(self):
+        clk = FakeClock()
+        br = CircuitBreaker(failures=3, cooldown=5.0, clock=clk)
+        br.record_failure(); br.record_failure()
+        br.record_success()                # streak broken
+        br.record_failure(); br.record_failure()
+        assert br.state == "closed"
+        br.record_failure()                # third consecutive
+        assert br.state == "open"
+        assert not br.allow()
+
+    def test_half_open_probe_budget_and_close(self):
+        clk = FakeClock()
+        br = CircuitBreaker(failures=1, cooldown=5.0, probes=1, clock=clk)
+        br.record_failure()
+        assert br.state == "open"
+        clk.advance(4.999)
+        assert br.state == "open"          # cooldown not yet elapsed
+        clk.advance(0.001)
+        assert br.state == "half_open"
+        assert br.allow()                  # the one probe
+        assert not br.allow()              # probe budget spent
+        br.record_success()
+        assert br.state == "closed"
+        assert br.allow()
+
+    def test_half_open_failure_reopens_and_restarts_cooldown(self):
+        clk = FakeClock()
+        br = CircuitBreaker(failures=1, cooldown=5.0, clock=clk)
+        br.record_failure()
+        clk.advance(5.0)
+        assert br.state == "half_open" and br.allow()
+        br.record_failure()                # probe failed
+        assert br.state == "open"
+        clk.advance(4.0)
+        assert br.state == "open"          # cooldown restarted at reopen
+        clk.advance(1.0)
+        assert br.state == "half_open"
+
+
+# ---------------------------------------------------------------------------
+# quota exhaustion through the service (§16.2)
+# ---------------------------------------------------------------------------
+
+class TestQuotas:
+    def test_tenant_exhaustion_sheds_without_degrading(self):
+        clk = FakeClock()
+        svc = make_svc(clk, tenant_rate=1.0, tenant_burst=2.0)
+        a1 = svc.submit(POOL[0], tenant="a")
+        a2 = svc.submit(POOL[1], tenant="a")
+        a3 = svc.submit(POOL[2], tenant="a")
+        assert (a1.outcome, a2.outcome) == ("admitted", "admitted")
+        assert a3.outcome == "shed" and a3.mode == "quota"
+        assert not a3.degraded and a3.result is None and a3.done
+        # the other tenant's bucket is untouched
+        b1 = svc.submit(POOL[3], tenant="b")
+        assert b1.outcome == "admitted"
+        assert svc.admission.shed_total == 1
+        assert svc.admission.tenant_stats["a"]["shed"] == 1
+
+    def test_refill_readmits_after_clock_advance(self):
+        clk = FakeClock()
+        svc = make_svc(clk, tenant_rate=2.0, tenant_burst=1.0)
+        assert svc.submit(POOL[0], tenant="a").outcome == "admitted"
+        assert svc.submit(POOL[1], tenant="a").outcome == "shed"
+        clk.advance(0.5)                   # 2/s × 0.5s = 1 token
+        assert svc.submit(POOL[2], tenant="a").outcome == "admitted"
+
+
+# ---------------------------------------------------------------------------
+# idempotent submit (§16.1)
+# ---------------------------------------------------------------------------
+
+class TestIdempotentSubmit:
+    def test_identical_inflight_coalesces_and_resolves_from_twin(self):
+        clk = FakeClock()
+        svc = make_svc(clk)
+        t1 = svc.submit(POOL[0], tenant="a")
+        t2 = svc.submit(POOL[0], tenant="b")      # same bytes + config
+        assert t1.outcome == "admitted" and t2.outcome == "coalesced"
+        assert t2.primary is t1 and not t2.done
+        done = svc.drain()
+        assert t1.done and t2.done
+        assert t2.result is t1.result             # one pipeline run
+        assert t2 in done
+        assert svc.admission.coalesced_total == 1
+        # exactly one request reached the batcher
+        assert svc.batcher.requests_run == 1
+
+    def test_coalesced_consumes_no_quota_or_queue_slot(self):
+        clk = FakeClock()
+        svc = make_svc(clk, tenant_rate=1.0, tenant_burst=1.0, max_queue=1)
+        t1 = svc.submit(POOL[0], tenant="a")
+        assert t1.outcome == "admitted"
+        # tenant a's bucket is empty and the queue is full — but an
+        # identical submit is free: it coalesces instead of shedding
+        t2 = svc.submit(POOL[0], tenant="a")
+        assert t2.outcome == "coalesced"
+
+    def test_replay_after_resolution_hits_cache_not_pipeline(self):
+        clk = FakeClock()
+        svc = make_svc(clk)
+        t1 = svc.submit(POOL[0], tenant="a")
+        svc.drain()
+        runs = svc.batcher.requests_run
+        t2 = svc.submit(POOL[0], tenant="a")      # replayed after the fact
+        assert t2.outcome == "cached" and t2.done and t2.cached
+        assert np.array_equal(np.asarray(t2.result.labels),
+                              np.asarray(t1.result.labels))
+        assert svc.batcher.requests_run == runs   # no new pipeline work
+
+
+# ---------------------------------------------------------------------------
+# breaker + degraded mode through the service (§16.3)
+# ---------------------------------------------------------------------------
+
+class TestBreakerDegradedMode:
+    def test_failures_open_breaker_and_degrade_instead_of_collapsing(
+            self, monkeypatch):
+        clk = FakeClock()
+        svc = make_svc(clk, breaker_failures=2, breaker_cooldown=5.0,
+                       degraded_sim_k=4)
+        flaky = FlakyClusterBatch(pipeline.cluster_batch, forever=True)
+        monkeypatch.setattr(sched.pipeline, "cluster_batch", flaky)
+
+        # two failed pumps open the breaker; every ticket still resolves
+        for i in range(2):
+            t = svc.submit(POOL[i])
+            (done,) = svc.drain()
+            assert done is t and t.done
+            assert t.degraded and t.mode == "approx"
+        assert svc.admission.breaker.state == "open"
+
+        # open breaker: requests degrade at submit, no compute attempted
+        calls = flaky.calls
+        t = svc.submit(POOL[2])
+        assert t.done and t.degraded and t.outcome == "degraded"
+        assert flaky.calls == calls
+        hz = svc.healthz()
+        assert hz["breaker"] == "open" and hz["status"] == "degraded"
+        assert hz["degraded_total"] == svc.admission.degraded_total == 3
+
+    def test_half_open_probe_closes_breaker_on_recovery(self, monkeypatch):
+        clk = FakeClock()
+        svc = make_svc(clk, breaker_failures=1, breaker_cooldown=5.0,
+                       degraded_sim_k=4)
+        flaky = FlakyClusterBatch(pipeline.cluster_batch, fail=1)
+        monkeypatch.setattr(sched.pipeline, "cluster_batch", flaky)
+        t = svc.submit(POOL[0])
+        svc.drain()
+        assert t.degraded and svc.admission.breaker.state == "open"
+        clk.advance(5.0)
+        t2 = svc.submit(POOL[1])          # half-open admits; pump probes
+        svc.drain()
+        assert t2.done and not t2.degraded
+        assert svc.admission.breaker.state == "closed"
+        assert svc.healthz()["status"] in ("ok", "warming")
+
+    def test_open_breaker_resolves_backlog_through_degraded_lane(
+            self, monkeypatch):
+        clk = FakeClock()
+        svc = make_svc(clk, breaker_failures=1, breaker_cooldown=50.0,
+                       degraded_sim_k=4)
+        flaky = FlakyClusterBatch(pipeline.cluster_batch, fail=1)
+        monkeypatch.setattr(sched.pipeline, "cluster_batch", flaky)
+        # queue three tickets; the first pump takes a bucket of 2 and
+        # fails → breaker opens, that bucket degrades
+        ts = [svc.submit(POOL[i]) for i in range(3)]
+        svc.drain()
+        assert svc.admission.breaker.state == "open"
+        # the backlog (third ticket) must not rot: the next pump
+        # resolves it via the degraded lane without touching compute
+        calls = flaky.calls
+        svc.drain()
+        assert all(t.done for t in ts)
+        assert ts[2].degraded and ts[2].mode == "approx"
+        assert flaky.calls == calls
+
+    def test_degraded_falls_back_to_stale_then_shed(self, monkeypatch):
+        clk = FakeClock()
+        # approx lane disabled: only stale last_good remains
+        svc = make_svc(clk, breaker_failures=1, degraded_sim_k=0)
+        good = svc.submit(POOL[0])
+        svc.drain()
+        assert not good.degraded
+        flaky = FlakyClusterBatch(pipeline.cluster_batch, forever=True)
+        monkeypatch.setattr(sched.pipeline, "cluster_batch", flaky)
+        t = svc.submit(POOL[1])
+        svc.drain()
+        assert t.done and t.degraded and t.mode == "stale"
+        assert t.result is good.result
+        # a fresh service with no last_good and no approx lane: shed
+        svc2 = make_svc(clk, breaker_failures=1, degraded_sim_k=0,
+                        serve_stale=False)
+        t2 = svc2.submit(POOL[1])
+        svc2.drain()
+        assert t2.outcome == "shed" and t2.mode == "compute_error"
+        assert t2.result is None and t2.done
+
+    def test_degraded_lane_failure_still_resolves(self, monkeypatch):
+        clk = FakeClock()
+        svc = make_svc(clk, breaker_failures=1, degraded_sim_k=4,
+                       serve_stale=False)
+        monkeypatch.setattr(
+            sched.pipeline, "cluster_batch",
+            FlakyClusterBatch(pipeline.cluster_batch, forever=True))
+        monkeypatch.setattr(
+            adm_mod.pipeline, "cluster",
+            FlakyCluster(pipeline.cluster, forever=True))
+        t = svc.submit(POOL[0])
+        svc.drain()
+        assert t.done and t.outcome == "shed"     # both lanes down
+
+    def test_degraded_approx_labels_and_uses_topk_config(self):
+        clk = FakeClock()
+        svc = make_svc(clk, max_queue=1, degrade_watermark=1.0,
+                       degraded_sim_k=4)
+        dcfg = svc.admission.degraded_config(N)
+        assert dcfg.similarity == "topk" and dcfg.sim_k == 4
+        svc.submit(POOL[0])                       # fills the queue
+        t = svc.submit(POOL[1])                   # over the hard bound
+        assert t.outcome == "degraded" and t.mode == "approx"
+        ref = pipeline.cluster(S=POOL[1], k=3, config=dcfg)
+        assert np.array_equal(np.asarray(t.result.labels),
+                              np.asarray(ref.labels))
+
+
+# ---------------------------------------------------------------------------
+# bounded queue (§16.1)
+# ---------------------------------------------------------------------------
+
+class TestBoundedQueue:
+    def test_watermark_degrades_before_hard_bound(self):
+        clk = FakeClock()
+        svc = make_svc(clk, max_queue=4, degrade_watermark=0.5,
+                       degraded_sim_k=4)
+        outcomes = [svc.submit(POOL[i]).outcome for i in range(4)]
+        # depth 0, 1 admit; depth 2 ≥ 0.5×4 → degraded before full
+        assert outcomes == ["admitted", "admitted", "degraded", "degraded"]
+        assert len(svc.admission.queue) == 2
+
+    def test_queue_never_exceeds_bound_under_seeded_overload(self):
+        clk = FakeClock()
+        svc = make_svc(clk, max_queue=3, degrade_watermark=1.0,
+                       degraded_sim_k=0, serve_stale=False)
+        traffic = TenantTraffic(N, tenants=("a", "b", "c"),
+                                weights=(0.6, 0.3, 0.1), pool=6, seed=3)
+        for tenant, S in traffic.take(40):
+            svc.submit(S, tenant=tenant)
+            assert len(svc.admission.queue) <= 3
+        assert svc.admission.shed_total > 0       # overload did shed
+
+    def test_traffic_generator_replays_bit_for_bit(self):
+        r1 = TenantTraffic(N, pool=3, seed=11).take(8)
+        r2 = TenantTraffic(N, pool=3, seed=11).take(8)
+        assert [t for t, _ in r1] == [t for t, _ in r2]
+        assert all(np.array_equal(a, b)
+                   for (_, a), (_, b) in zip(r1, r2))
+
+
+# ---------------------------------------------------------------------------
+# latency accounting with injected time
+# ---------------------------------------------------------------------------
+
+class TestLatencyAccounting:
+    def test_ticket_waited_reads_injected_clock(self, monkeypatch):
+        clk = FakeClock()
+        svc = make_svc(clk)
+        slow = SlowClusterBatch(pipeline.cluster_batch, clk, delay=0.25)
+        monkeypatch.setattr(sched.pipeline, "cluster_batch", slow)
+        t = svc.submit(POOL[0])
+        assert t.waited is None                   # unresolved
+        clk.advance(1.0)                          # queueing delay
+        svc.drain()
+        assert t.waited == pytest.approx(1.25)    # queue + compute
+        assert slow.calls == 1
+
+    def test_shed_and_cached_resolve_at_zero_wait(self):
+        clk = FakeClock()
+        svc = make_svc(clk, tenant_rate=1.0, tenant_burst=1.0)
+        svc.submit(POOL[0], tenant="a")
+        shed = svc.submit(POOL[1], tenant="a")
+        assert shed.outcome == "shed" and shed.waited == 0.0
+        svc.drain()
+        hit = svc.submit(POOL[0], tenant="b")
+        assert hit.outcome == "cached" and hit.waited == 0.0
+
+
+# ---------------------------------------------------------------------------
+# error type hygiene
+# ---------------------------------------------------------------------------
+
+def test_injected_faults_are_distinguishable():
+    flaky = FlakyClusterBatch(pipeline.cluster_batch, fail=1)
+    with pytest.raises(InjectedFault):
+        flaky(S=np.eye(4, dtype=np.float32), k=2)
+    assert flaky.fail_remaining == 0

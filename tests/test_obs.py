@@ -323,8 +323,15 @@ def test_service_healthz_contract():
     hz = svc.healthz()
     assert set(hz) == {"status", "ready", "ticks", "window_filled",
                        "window_capacity", "queue_depth",
-                       "recompile_events", "jitcache_size"}
+                       "recompile_events", "jitcache_size",
+                       "breaker", "admission_queue_depth",
+                       "shed_total", "degraded_total"}
     assert hz["status"] == "warming" and hz["ready"] is False
+    # §16 serving keys are always present; without admission control
+    # the breaker reads "disabled" and the counters stay zero
+    assert hz["breaker"] == "disabled"
+    assert hz["admission_queue_depth"] == 0
+    assert hz["shed_total"] == 0 and hz["degraded_total"] == 0
     for t in range(4):
         svc.tick(rng.normal(size=16).astype(np.float32))
     hz = svc.healthz()
@@ -356,3 +363,113 @@ def test_dump_jsonl_round_trips(tmp_path):
     assert set(sp) >= {"duration", "compiles", "compile_s", "run_s"}
     metrics_line = [l for l in lines if l["kind"] == "metrics"][0]
     assert "programs" in metrics_line["compile"]
+
+
+# ---------------------------------------------------------------------------
+# coverage gaps (ISSUE 8 satellite): concurrent tracing, watch nesting,
+# render edge cases
+# ---------------------------------------------------------------------------
+
+def test_concurrent_tracing_sessions_from_two_threads():
+    """Two overlapping ``tracing()`` sessions on different threads:
+    sessions are refcounted, so the first thread to exit must NOT
+    switch collection off under the one still inside (the save/restore
+    bug this pins).  Sequenced with events — no sleeps, no races."""
+    obs_trace.clear()
+    a_entered = threading.Event()
+    b_exited = threading.Event()
+    failures = []
+
+    def worker_a():
+        try:
+            with obs_trace.tracing():
+                a_entered.set()
+                assert b_exited.wait(30), "sequencing timeout"
+                # thread B's session has opened AND closed by now; this
+                # thread's session is still live, so its span collects
+                with obs_trace.span("a-late"):
+                    pass
+        except Exception as e:   # noqa: BLE001 — surface in main thread
+            failures.append(e)
+
+    ta = threading.Thread(target=worker_a)
+    ta.start()
+    try:
+        assert a_entered.wait(30), "sequencing timeout"
+        with obs_trace.tracing():
+            with obs_trace.span("b-inner"):
+                pass
+        b_exited.set()
+    finally:
+        ta.join(30)
+    assert not failures
+    names = [s.name for s in obs_trace.spans()]
+    assert "b-inner" in names
+    assert "a-late" in names, \
+        "thread B's exit turned tracing off under thread A"
+    assert not obs_trace.enabled()               # all sessions closed
+    obs_trace.clear()
+
+
+def test_watch_recompiles_nesting():
+    """Nested watches: the inner watch counts only its own region and
+    freezes at its exit; the outer watch keeps counting across and
+    after the inner one (§15.2's windowed-delta semantics compose)."""
+    with obs_trace.watch_recompiles() as outer:
+        jax.block_until_ready(jax.jit(lambda x: x + 17.0)(jnp.ones(7)))
+        with obs_trace.watch_recompiles() as inner:
+            jax.block_until_ready(
+                jax.jit(lambda x: x * 19.0)(jnp.ones(11)))
+        inner_frozen = inner.count
+        assert inner_frozen >= 1
+        # a compile after the inner block must not leak into it...
+        jax.block_until_ready(jax.jit(lambda x: x - 23.0)(jnp.ones(13)))
+        assert inner.count == inner_frozen
+    # ...but the outer watch saw all three regions
+    assert outer.count >= inner_frozen + 2
+    assert outer.compile_s > inner.compile_s
+    assert outer.recompile_events >= inner.recompile_events
+
+
+def test_render_empty_registry_is_empty_string():
+    """A fresh registry renders as exactly "" — no stray newline; a
+    scrape of a process that registered nothing yet is byte-clean."""
+    assert obs_export.render(Registry()) == ""
+
+
+def test_render_label_collision_and_collector_shadowing():
+    """One family, several label sets, plus a collector emitting a
+    sample under the SAME family name: one HELP/TYPE pair, every
+    sample rendered, collector sample grouped into the typed family
+    (deterministic golden)."""
+    reg = Registry()
+    reg.counter("dup_total", "dup family", route="a").inc(1)
+    reg.counter("dup_total", route="b").inc(2)
+    reg.register_collector("ext", lambda: {"dup_total": 9.0})
+    text = obs_export.render(reg)
+    assert text == (
+        "# HELP dup_total dup family\n"
+        "# TYPE dup_total counter\n"
+        'dup_total{route="a"} 1\n'
+        'dup_total{route="b"} 2\n'
+        "dup_total 9\n"
+    )
+    # label-set identity: the two label sets are distinct instruments,
+    # same-name-same-labels is the same instrument, and a same-name
+    # different-TYPE registration is rejected
+    assert reg.counter("dup_total", route="a") \
+        is not reg.counter("dup_total", route="b")
+    assert reg.counter("dup_total", route="a") \
+        is reg.counter("dup_total", route="a")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("dup_total", route="a")
+
+
+def test_family_total_sums_label_sets():
+    """§16's rollup helper: one number across a family's label sets
+    (how the load bench reports total sheds regardless of reason)."""
+    reg = Registry()
+    reg.counter("shed_total", "sheds", reason="quota").inc(3)
+    reg.counter("shed_total", reason="queue_full").inc(2)
+    assert reg.family_total("shed_total") == 5.0
+    assert reg.family_total("missing_total") == 0.0

@@ -105,19 +105,19 @@ def test_sparse_sources_converge_early():
 # hub parity: sparse == dense hub program, tolerance vs exact
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("variant", sorted(VARIANTS))
-def test_apsp_sparse_bitwise_matches_apsp_hub(variant):
+def test_apsp_sparse_bitwise_matches_apsp_hub():
     """Both programs left-fold one edge extension per round from the
     same D0 with exact-min combining and share the composition
     epilogue, so the densified sparse estimate is BITWISE the dense
-    hub one — per TMFG variant topology."""
+    hub one.  (Per-variant TMFG topologies are exercised by the seeded
+    sweep in tests/test_property.py, ISSUE 8; this keeps one fast
+    in-file smoke.)"""
     n = 48
-    _, _, W = _tmfg_lengths(n, seed=11, variant=variant)
+    _, _, W = _tmfg_lengths(n, seed=11, variant="opt")
     for h in (4, 8):
         got = np.asarray(A.apsp_sparse(W, n_hubs=h))
         want = np.asarray(A.apsp_hub(jnp.asarray(W), n_hubs=h))
-        np.testing.assert_array_equal(got, want,
-                                      err_msg=f"{variant} h={h}")
+        np.testing.assert_array_equal(got, want, err_msg=f"h={h}")
 
 
 def test_apsp_sparse_default_hubs_matches_hub():

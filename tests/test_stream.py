@@ -431,6 +431,78 @@ class TestClusterService:
 
 
 # ---------------------------------------------------------------------------
+# error paths (ISSUE 8 satellite): submit shape rejection, batcher
+# empty/duplicate-only flushes
+# ---------------------------------------------------------------------------
+
+class TestSubmitRejectsBadShapes:
+    def test_series_window_rejected_not_truncated(self):
+        """A raw (n, L) series window handed to submit() must raise —
+        the old behavior would have passed it to the pipeline as if it
+        were a similarity matrix (silently clustering garbage, or
+        truncating when L exceeded the window)."""
+        n, L = 16, 40
+        svc = ClusterService(n=n, window=L, k=3)
+        series = _ticks(n, L + 8).T                  # (n, L+8): too long
+        with pytest.raises(ValueError, match="never truncated"):
+            svc.submit(series)
+        with pytest.raises(ValueError, match="similarity matrix"):
+            svc.submit(np.zeros((n, L), np.float32))  # series-shaped
+
+    def test_wrong_universe_and_rank_rejected(self):
+        svc = ClusterService(n=16, window=8, k=3)
+        with pytest.raises(ValueError, match="similarity matrix"):
+            svc.submit(np.eye(12, dtype=np.float32))  # wrong n
+        with pytest.raises(ValueError, match="similarity matrix"):
+            svc.submit(np.zeros(16, np.float32))      # rank 1
+        # the right shape still goes through
+        S = np.corrcoef(_ticks(16, 20, seed=3).T).astype(np.float32)
+        req = svc.submit(S)
+        svc.drain()
+        assert req.done
+
+
+class TestBatcherFlushEdgeCases:
+    def test_empty_flush_is_a_counted_noop_nowhere(self):
+        """flush() on an empty queue returns [] and counts NOTHING — a
+        service draining on a timer must not inflate flush statistics
+        while idle."""
+        mb = MicroBatcher(max_batch=4, cache=ResultCache(8))
+        assert mb.flush() == []
+        assert mb.flush() == []
+        assert (mb.flushes, mb.batches_run, mb.dedup_hits) == (0, 0, 0)
+
+    def test_duplicate_only_flush_runs_pipeline_once(self):
+        """A flush whose queue is ONE matrix submitted three times:
+        exactly one pipeline run; the twins resolve from it and count
+        as dedup hits, and a fourth submit after the flush is answered
+        by the cache re-probe without growing batches_run."""
+        S = np.corrcoef(_ticks(12, 30, seed=4).T).astype(np.float32)
+        mb = MicroBatcher(max_batch=4, cache=ResultCache(8))
+        reqs = [mb.submit(S, k=3) for _ in range(3)]
+        out = mb.flush()
+        assert out == reqs and all(r.done for r in reqs)
+        assert mb.batches_run == 1 and mb.requests_run == 1
+        assert mb.dedup_hits == 2
+        assert all(r.result is reqs[0].result for r in reqs[1:])
+        r4 = mb.submit(S, k=3)
+        mb.flush()
+        assert r4.done and r4.cached and mb.batches_run == 1
+
+    def test_cacheless_duplicate_flush_still_resolves_everything(self):
+        """Without a cache there is no dedupe lane at all: duplicates
+        run as a batch, every request resolves, nothing double-counts."""
+        S = np.corrcoef(_ticks(12, 30, seed=5).T).astype(np.float32)
+        mb = MicroBatcher(max_batch=4, cache=None)
+        reqs = [mb.submit(S, k=3) for _ in range(2)]
+        mb.flush()
+        assert all(r.done for r in reqs) and mb.dedup_hits == 0
+        assert mb.requests_run == 2
+        np.testing.assert_array_equal(reqs[0].result.labels,
+                                      reqs[1].result.labels)
+
+
+# ---------------------------------------------------------------------------
 # pipeline wiring — moments / reuse_tmfg kwargs
 # ---------------------------------------------------------------------------
 
