@@ -71,7 +71,7 @@ def _service_rows(scale: float, ticks: int = 96, every: int = 16):
     n = max(48, int(400 * scale))
     L = max(32, int(128 * scale))
     from repro.data.timeseries import make_dataset
-    X, _ = make_dataset(n, L + ticks, 4, noise=0.7, seed=1)
+    X, _ = make_dataset(n, L + every + ticks, 4, noise=0.7, seed=1)
     import time as _time
 
     from repro.obs import trace as obs_trace
@@ -79,22 +79,40 @@ def _service_rows(scale: float, ticks: int = 96, every: int = 16):
     def run_service(**kw):
         svc = ClusterService(n=n, window=L, k=4, variant="opt",
                              recluster_every=every, **kw)
-        # warm-up: fill the window and take one recluster so jit compile
-        # cost (paid once per deployment) stays out of the steady state
+        # warm-up: fill the window, then run one full recluster cadence,
+        # so every steady-state code path — block tick flush, batcher
+        # flush, and the warm tiers — has compiled (cost paid once per
+        # deployment) before the clock starts
         with obs_trace.watch_recompiles() as w:
             for t in range(L):
                 svc.tick(X[:, t])
             svc.recluster()
+            for t in range(L, L + every):
+                req = svc.tick(X[:, t])
+                if req is not None and not req.done:
+                    svc.drain()
+            if kw.get("tmfg_threshold", 0.0) > 0.0 and svc.latest is not None:
+                # prime the reuse-topology program the tmfg tier runs —
+                # its compile cost is once-per-deployment like the rest
+                cluster(S=svc.similarity(), k=4, config=svc.cfg,
+                        reuse_tmfg=svc.latest.tmfg)
+        hits0 = svc.warm_hits
         t0 = _time.perf_counter()
-        for t in range(L, L + ticks):
+        for t in range(L + every, L + every + ticks):
             req = svc.tick(X[:, t])
             if req is not None and not req.done:
                 svc.drain()
-        return svc, _time.perf_counter() - t0, w.compile_s
+        return (svc, _time.perf_counter() - t0, w.compile_s,
+                svc.warm_hits - hits0)          # steady-state hits only
 
-    svc, t_svc, c_svc = run_service()
-    svc_w, t_warm, c_warm = run_service(reuse_threshold=0.0,
-                                        tmfg_threshold=0.05)
+    svc, t_svc, c_svc, h_svc = run_service()
+    # warm row: warm tiers on.  Thresholds are mean-|ΔS| budgets (the
+    # WarmStart gate metric, stream/cache.py) sized for this scenario's
+    # 16-tick recluster cadence: ≤0.25 mean drift returns the previous
+    # labels as-is, ≤0.3 keeps the TMFG topology and reruns only the
+    # downstream stages on the fresh similarities.
+    svc_w, t_warm, c_warm, h_warm = run_service(reuse_threshold=0.25,
+                                                tmfg_threshold=0.3)
     n_reclusters = max(1, ticks // every)
 
     # from-scratch baseline: full cluster() at the same cadence (warmed)
@@ -105,7 +123,7 @@ def _service_rows(scale: float, ticks: int = 96, every: int = 16):
         cluster(X[:, end - L:end], k=4, variant="opt")
     t_base = _time.perf_counter() - t0
 
-    def row(tag, svc_i, t, c):
+    def row(tag, svc_i, t, c, hits):
         return dict(
             name=f"stream/{tag}", n=n, L=L,
             us_per_call=f"{t / ticks * 1e6:.0f}",
@@ -113,11 +131,11 @@ def _service_rows(scale: float, ticks: int = 96, every: int = 16):
             ticks_per_s=f"{ticks / max(t, 1e-9):.0f}",
             t_service=f"{t:.3f}", t_scratch=f"{t_base:.3f}",
             compile_s=f"{c:.3f}", run_s=f"{t / ticks:.5f}",
-            reclusters=n_reclusters, warm_hits=svc_i.warm_hits,
+            reclusters=n_reclusters, warm_hits=hits,
         )
 
-    return [row("service", svc, t_svc, c_svc),
-            row("service-warm", svc_w, t_warm, c_warm)]
+    return [row("service", svc, t_svc, c_svc, h_svc),
+            row("service-warm", svc_w, t_warm, c_warm, h_warm)]
 
 
 def run(scale: float = 1.0):

@@ -98,20 +98,25 @@ def apsp_exact(W: jax.Array, *, backend: str = "auto") -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("n_hubs", "rounds", "backend"))
-def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
+def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 0,
              backend: str = "auto") -> jax.Array:
     """Hub-based approximate APSP (paper optimization C3, TPU formulation).
 
     Args:
       W: dense (n, n) length matrix (inf off-graph, 0 diagonal).
       n_hubs: number of hub vertices; 0 means ceil(sqrt(n)).
-      rounds: Bellman-Ford relaxation rounds for the hub rows.  The TMFG's
-        diameter is small in practice (hub structure); 32 covers every
-        dataset in the paper.  Early rounds converge; extra rounds are
-        no-ops on already-converged rows (min is idempotent).
+      rounds: Bellman-Ford relaxation cap for the hub rows; 0 (the
+        default) relaxes to the fixed point with the true n-round bound
+        as the cap.  The loop exits as soon as a round changes nothing,
+        so the generous cap costs nothing once converged — a fixed
+        truncation (the old ``rounds=32`` default) silently left
+        unreachable-looking ``inf`` distances whenever the TMFG's
+        hop-diameter exceeded it, which real graphs hit from n ≈ 1000
+        (the BENCH_9 sparse-tail shattering).
     """
     n = W.shape[0]
     h = hub_count(n, n_hubs)
+    cap = rounds if rounds else n
 
     # hubs = highest weighted degree (sum of finite incident 1/length —
     # strong-similarity vertices attract shortest paths)
@@ -119,13 +124,20 @@ def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
     strength = jnp.sum(jnp.where(finite, 1.0 / (W + 1e-6), 0.0), axis=1)
     hubs = jax.lax.top_k(strength, h)[1]
 
-    # Bellman-Ford on the h hub rows: D_h <- min(D_h, minplus(D_h, W))
-    D_h = W[hubs]                                       # (h, n)
+    # Bellman-Ford on the h hub rows: D_h <- min(D_h, minplus(D_h, W)),
+    # early-exited at the fixed point
+    D_h0 = W[hubs]                                      # (h, n)
 
-    def body(D_h, _):
-        return jnp.minimum(D_h, ops.minplus(D_h, W, backend=backend)), None
+    def cond(carry):
+        i, _, changed = carry
+        return (i < cap) & changed
 
-    D_h, _ = jax.lax.scan(body, D_h, None, length=rounds)
+    def body(carry):
+        i, D_h, _ = carry
+        D2 = jnp.minimum(D_h, ops.minplus(D_h, W, backend=backend))
+        return i + 1, D2, jnp.any(D2 < D_h)
+
+    _, D_h, _ = jax.lax.while_loop(cond, body, (0, D_h0, jnp.bool_(True)))
 
     # composition through hubs + exact 1-hop floor
     est = ops.minplus(D_h.T, D_h, backend=backend)      # (n, n)
@@ -136,14 +148,15 @@ def apsp_hub(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
 
 
 @functools.partial(jax.jit, static_argnames=("n_hubs", "rounds", "backend"))
-def hub_factor_sparse(graph, *, n_hubs: int = 0, rounds: int = 32,
+def hub_factor_sparse(graph, *, n_hubs: int = 0, rounds: int = 0,
                       backend: str = "auto"):
     """Hub factorization of sparse APSP: ``(hubs (h,), D_h (h, n))``.
 
     The sparse counterpart of :func:`apsp_hub`'s first half — the same
     weighted-degree hub selection (``kernels.sparse_apsp.hub_strength``
     is the CSR form of the dense ``strength`` reduction above) and the
-    same capped Bellman-Ford convergence contract, but O(h·n + E)
+    same run-to-fixed-point Bellman-Ford contract (``rounds=0`` caps at
+    n; a nonzero cap truncates, as in :func:`apsp_hub`), but O(h·n + E)
     memory: relaxation runs over the 2(3n-6) CSR entries, never a dense
     row of W.  Downstream, any pairwise distance is
 
@@ -175,7 +188,7 @@ def csr_from_dense(W) -> "sparse_kernels.CSRGraph":
                                          jnp.asarray(w))
 
 
-def apsp_sparse(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
+def apsp_sparse(W: jax.Array, *, n_hubs: int = 0, rounds: int = 0,
                 backend: str = "auto") -> jax.Array:
     """Sparse hub APSP, densified back to (n, n) for parity and interop.
 
@@ -198,7 +211,7 @@ def apsp_sparse(W: jax.Array, *, n_hubs: int = 0, rounds: int = 32,
 
 
 def apsp(W: jax.Array, *, method: str = "hub", n_hubs: int = 0,
-         rounds: int = 32, backend: str = "auto") -> jax.Array:
+         rounds: int = 0, backend: str = "auto") -> jax.Array:
     """Dispatch to exact / hub / sparse APSP by ``method``.
 
     The signature names every knob explicitly (no ``**kw`` grab bag):

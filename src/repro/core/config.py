@@ -59,16 +59,20 @@ class PipelineConfig:
       topk:        up-front candidate-table width (0 disables).
       apsp_method: "hub" (paper optimization C3) | "exact" | "sparse"
                    (the edge-list hub factorization + sparse DBHT tail,
-                   DESIGN.md §14 — never materializes (n, n); staged
-                   execution, rejected by the fused program).
+                   DESIGN.md §14 — never materializes (n, n); fused it
+                   lowers to the §17 sparse program, staged it runs the
+                   host-orchestrated per-cluster tail).
       apsp_hubs:   hub count for hub-APSP; 0 = ceil(sqrt(n)).
-      apsp_rounds: Bellman-Ford rounds for the hub rows.
+      apsp_rounds: Bellman-Ford relaxation cap for the hub rows; 0 (the
+                   default) relaxes to the fixed point (cap n) — the
+                   loops early-exit once converged, so only a nonzero
+                   cap ever truncates distances.
       backend:     kernel dispatch — "auto" | "pallas" | "interpret" | "jnp".
       dbht_impl:   DBHT execution strategy — "device" | "host" (§11.4).
       similarity:  similarity representation (DESIGN.md §13) — "dense"
                    materializes the (n, n) Pearson matrix; "topk" keeps
                    only a per-row (n, sim_k) candidate table (the
-                   repro.approx subsystem; staged-only for now).
+                   repro.approx subsystem; fuses end to end, §17).
       sim_k:       candidate-table width for similarity="topk"
                    (clamped to n-1 at runtime; must be 0 for "dense").
     """
@@ -78,7 +82,7 @@ class PipelineConfig:
     topk: int = 64
     apsp_method: str = "hub"
     apsp_hubs: int = 0
-    apsp_rounds: int = 32
+    apsp_rounds: int = 0
     backend: str = "auto"
     dbht_impl: str = "device"
     similarity: str = "dense"
@@ -154,8 +158,10 @@ class PipelineConfig:
     def approx(cls, sim_k: int = 64, **overrides) -> "PipelineConfig":
         """Sparse-similarity OPT-TDBHT (DESIGN.md §13): the lazy TMFG on
         an (n, sim_k) candidate table — the (n, n) Pearson matrix is
-        never materialized (`repro.approx`).  Staged-only for now: the
-        fused one-jit path rejects it with a clear error.
+        never materialized (`repro.approx`).  Runs fused end to end as
+        ONE jitted device program with no (n, n) array in its jaxpr
+        (core/fused_approx.py, DESIGN.md §17); ``fused=False`` keeps
+        the staged per-stage-timings path.
 
         ``overrides`` may replace any OPT default (method, backend,
         APSP knobs, ...); ``similarity``/``sim_k`` are this

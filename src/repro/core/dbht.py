@@ -173,7 +173,7 @@ def _flow_to_converging(bubble_parent, direction, strength=None):
 
 
 def _dbht_host(S, tmfg, *, apsp_method, apsp_backend, precomputed_apsp,
-               apsp_hubs: int = 0, apsp_rounds: int = 32):
+               apsp_hubs: int = 0, apsp_rounds: int = 0):
     """The original per-matrix numpy walk (reference oracle)."""
     S = np.asarray(S, dtype=np.float64)
     n = S.shape[0]

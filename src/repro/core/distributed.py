@@ -485,10 +485,11 @@ def apsp_hub_sharded(W: jax.Array, mesh: Mesh, *, axis="data",
         n_hubs, rounds = config.apsp_hubs, config.apsp_rounds
     else:
         n_hubs = 0 if n_hubs is None else n_hubs
-        rounds = 32 if rounds is None else rounds
+        rounds = 0 if rounds is None else rounds
     n = W.shape[0]
     d = _axis_total(mesh, axis)
     assert n % d == 0
+    cap = rounds if rounds else n
     h = n_hubs if n_hubs > 0 else max(4, math.ceil(math.sqrt(n)))
     h = min(h, n)
 
@@ -501,14 +502,25 @@ def apsp_hub_sharded(W: jax.Array, mesh: Mesh, *, axis="data",
         idx = lax.axis_index(axis)
         k0 = idx * (n // d)
 
-        def round_body(D_h, _):
-            # local tropical product: D_h[:, local k] x W_local -> (h, n)
+        def cond(carry):
+            i, _, changed = carry
+            return (i < cap) & changed
+
+        def round_body(carry):
+            # local tropical product: D_h[:, local k] x W_local -> (h, n).
+            # The pmin-combined update is replicated, so the fixed-point
+            # predicate is identical on every device and the while_loop
+            # stays in lockstep (rounds=0 = relax to convergence, the
+            # same contract as the single-device apsp_hub).
+            i, D_h, _ = carry
             A = lax.dynamic_slice(D_h, (0, k0), (h, n // d))
             part = jnp.min(A[:, :, None] + W_local[None, :, :], axis=1)
             combined = lax.pmin(part, axis)
-            return jnp.minimum(D_h, combined), None
+            D2 = jnp.minimum(D_h, combined)
+            return i + 1, D2, jnp.any(D2 < D_h)
 
-        D_h, _ = lax.scan(round_body, D_h, None, length=rounds)
+        _, D_h, _ = lax.while_loop(cond, round_body,
+                                   (0, D_h, jnp.bool_(True)))
         # composition for the local row block
         A = lax.dynamic_slice(D_h, (0, k0), (h, n // d))  # (h, n/d)
         est = jnp.min(A.T[:, :, None] + D_h[None, :, :], axis=1)  # (n/d, n)
@@ -520,3 +532,105 @@ def apsp_hub_sharded(W: jax.Array, mesh: Mesh, *, axis="data",
                         out_specs=dist_sh.timeseries_spec(axis),
                         check_vma=False)(W, D_h0)
     return est
+
+
+# ---------------------------------------------------------------------------
+# the config-driven multi-device funnel (DESIGN.md §17.4)
+# ---------------------------------------------------------------------------
+
+def run_pipeline_sharded(X_or_S, config: PipelineConfig, mesh: Mesh, *,
+                         axis="data", is_similarity: Optional[bool] = None,
+                         caps=None):
+    """The whole pipeline on ``mesh``, dispatched by ``config`` — the one
+    sharded entry point (``run_pipeline_device(..., mesh=)`` lands here).
+
+    The bespoke stage wrappers above (``pearson_sharded``,
+    ``build_tmfg_sharded``, ``apsp_hub_sharded``) stay as the unit-tested
+    building blocks; this funnel composes the ones the config selects:
+
+      * ``similarity="topk"`` from a time series — the scaling path:
+        ``dist.sharding.topk_pearson_sharded`` builds the (n, K) table
+        with each device owning a row panel, and the fused §17 tail
+        (core/fused_approx.fused_from_table) runs as one jitted program
+        on its output.  Nothing (n, n) is ever materialized.
+      * dense similarity — row-sharded Pearson, column-sharded TMFG
+        construction, row-sharded hub APSP (or exact/replicated below
+        ``HUB_MIN_N``, matching the single-device dispatcher), then the
+        device DBHT core.
+      * ``apsp_method="sparse"`` or topk-from-S — the fused single-jit
+        program on the materialized input (GSPMD places it); there is
+        no cross-device structure left to exploit by hand.
+
+    Returns the same ``DeviceOutputs`` pytree as ``run_pipeline_device``
+    (device arrays, no host transfer).
+    """
+    from repro.core import pipeline as pipe    # lazy: no import cycle
+    import repro.core.apsp as apsp_mod
+    import repro.core.dbht as dbht_mod
+    import repro.core.jitcache as jitcache
+
+    cfg = config
+    if cfg.dbht_impl != "device":
+        raise ValueError("run_pipeline_sharded IS the device program; "
+                         "config.dbht_impl='host' has no fused form")
+    arr = jnp.asarray(X_or_S, jnp.float32)
+    assert arr.ndim == 2, f"sharded funnel takes one matrix, got {arr.shape}"
+    if is_similarity is None:
+        is_similarity = arr.shape[-1] == arr.shape[-2]
+    n = arr.shape[0]
+
+    if cfg.similarity == "topk" and not is_similarity:
+        kk = min(cfg.sim_k, n - 1)
+        v, i, z = dist_sh.topk_pearson_sharded(arr, kk, mesh, axis=axis)
+
+        def build():
+            from repro.core import fused_approx as fa
+            tail = fa.fused_from_table(cfg, n, from_x=True, caps=caps)
+
+            def whole(tv, ti, src):
+                core = tail(tv, ti, src)
+                return pipe.DeviceOutputs(
+                    tmfg=core["tmfg"], direction=core["direction"],
+                    conv_mask=core["conv_mask"],
+                    cluster_of=core["cluster_of"],
+                    bubble_of=core["bubble_of"], apsp=core["D"],
+                    linkage=core["Z"], hubs=core["hubs"],
+                    overflow=core["overflow"], counters=core["counters"])
+
+            return jax.jit(whole)
+
+        fn = jitcache.cached(
+            ("sharded_tail", cfg, n, kk, caps,
+             tuple(str(d) for d in mesh.devices.flat)), build)
+        return fn(v, i, z)
+
+    if cfg.similarity == "topk" or cfg.apsp_method == "sparse":
+        # materialized-S topk, or the sparse tail: one fused program
+        return pipe.run_pipeline_device(arr, cfg,
+                                        is_similarity=is_similarity,
+                                        caps=caps)
+
+    S = arr if is_similarity else pearson_sharded(arr, mesh, axis=axis)
+    tm = build_tmfg_sharded(S, mesh, axis=axis, config=cfg)
+    W = apsp_mod.edge_lengths(n, tm.edges, S)
+    if cfg.apsp_method == "hub" and n >= apsp_mod.HUB_MIN_N:
+        D = apsp_hub_sharded(W, mesh, axis=axis, config=cfg)
+    else:
+        # same small-n dispatch as apsp.apsp: exact squaring, replicated
+        D = apsp_mod.apsp(W, method="exact", backend=cfg.backend)
+
+    def build_tail():
+        def tail(S, tm, D):
+            core = dbht_mod._dbht_device_core(
+                S, tm.edges, tm.bubble_parent, tm.bubble_tri,
+                tm.bubble_verts, tm.home_bubble, D, backend=cfg.backend)
+            return pipe.DeviceOutputs(
+                tmfg=tm, direction=core["direction"],
+                conv_mask=core["conv_mask"], cluster_of=core["cluster_of"],
+                bubble_of=core["bubble_of"], apsp=core["D"],
+                linkage=core["Z"])
+
+        return jax.jit(tail)
+
+    fn = jitcache.cached(("sharded_dense_tail", cfg, n), build_tail)
+    return fn(S, tm, D)

@@ -115,15 +115,23 @@ def similarity_from_timeseries(X, *, backend: str = "auto") -> jnp.ndarray:
 class DeviceOutputs(NamedTuple):
     """Everything the fused pipeline leaves on device: the TMFG arrays
     plus the DBHT stage outputs, one pytree = one host transfer.
-    Batched runs carry a leading batch axis on every leaf."""
+    Batched runs carry a leading batch axis on every leaf.
+
+    The last three fields exist only on the fused sparse/approx program
+    (DESIGN.md §17) and default to ``None`` — an empty pytree subtree,
+    so the dense program's pytree and its cached executables are
+    unchanged."""
 
     tmfg: TMFGResult          # fixed-shape TMFG arrays
     direction: jax.Array      # (B_,) bubble-tree edge directions ([0] unused)
     conv_mask: jax.Array      # (B_,) converging-bubble indicator
     cluster_of: jax.Array     # (n,) coarse cluster id per vertex
     bubble_of: jax.Array      # (n,) fine bubble assignment per vertex
-    apsp: jax.Array           # (n, n) distances used
-    linkage: jax.Array        # (n-1, 4) scipy-style dendrogram
+    apsp: jax.Array           # (n, n) distances — (h, n) hub factor on
+    linkage: jax.Array        # the sparse tail; (n-1, 4) dendrogram
+    hubs: Optional[jax.Array] = None      # (h,) hub ids (sparse tail)
+    overflow: Optional[jax.Array] = None  # bool: slot-grid caps exceeded
+    counters: Optional[object] = None     # SparseCounters (approx only)
 
 
 def _fused_one(cfg: PipelineConfig, have_S: bool):
@@ -152,9 +160,34 @@ def _fused_one(cfg: PipelineConfig, have_S: bool):
     return one
 
 
+def _needs_approx_body(cfg: PipelineConfig) -> bool:
+    """Configs whose fused form is the sparse/approx program
+    (core/fused_approx.py, DESIGN.md §17) instead of the dense body."""
+    return cfg.similarity == "topk" or cfg.apsp_method == "sparse"
+
+
+def _fused_approx_one(cfg: PipelineConfig, have_S: bool, n: int, caps):
+    """The §17 body wrapped into the :class:`DeviceOutputs` pytree."""
+    from repro.core import fused_approx as fa  # lazy: keeps import light
+
+    raw = fa.fused_one(cfg, have_S, n, caps=caps)
+
+    def one(arr):
+        core = raw(arr)
+        return DeviceOutputs(
+            tmfg=core["tmfg"], direction=core["direction"],
+            conv_mask=core["conv_mask"], cluster_of=core["cluster_of"],
+            bubble_of=core["bubble_of"], apsp=core["D"], linkage=core["Z"],
+            hubs=core["hubs"], overflow=core["overflow"],
+            counters=core["counters"])
+
+    return one
+
+
 def run_pipeline_device(X_or_S, config: PipelineConfig, *,
                         is_similarity: Optional[bool] = None,
-                        batched: Optional[bool] = None) -> DeviceOutputs:
+                        batched: Optional[bool] = None,
+                        caps=None, mesh=None) -> DeviceOutputs:
     """The whole pipeline as ONE jitted device program (DESIGN.md §12.2).
 
     ``X_or_S`` is a time-series matrix ``(n, L)``, a similarity matrix
@@ -166,6 +199,13 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
     §12.3), so a serving loop replaying one config+shape compiles
     exactly once (the recompile guard in tests/test_fused.py).
 
+    ``similarity="topk"`` and ``apsp_method="sparse"`` configs lower to
+    the fused sparse/approx program (core/fused_approx.py, DESIGN.md
+    §17) — same contract, no (n, n) array in the jaxpr; ``caps``
+    overrides its ``(c_cap, m_cap)`` nested-HAC slot grid.  ``mesh``
+    routes the call through the multi-device funnel
+    (:func:`repro.core.distributed.run_pipeline_sharded`).
+
     Returns :class:`DeviceOutputs` — device arrays, NO host transfer:
     callers choose what crosses the boundary (``cluster`` transfers
     everything once; the stream scheduler's pad entries never do).
@@ -175,24 +215,10 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
             "run_pipeline_device IS the device program; "
             "config.dbht_impl='host' has no fused form — use "
             "cluster(..., fused=False) for the numpy oracle")
-    if config.apsp_method == "sparse":
-        # narrower than the generic topk staged-only error: the sparse
-        # tail is not merely unfused YET — it is host-orchestrated by
-        # design (per-cluster HAC programs with data-dependent shapes,
-        # DESIGN.md §14.6), so there is no single jaxpr to fuse into
-        raise ValueError(
-            "run_pipeline_device cannot fuse apsp_method='sparse': the "
-            "sparse APSP+DBHT tail runs as host-orchestrated staged "
-            "device programs (its per-cluster HAC shapes are "
-            "data-dependent, DESIGN.md §14.6) — cluster()/"
-            "cluster_batch() route it to the staged path automatically")
-    if config.similarity != "dense":
-        raise ValueError(
-            "run_pipeline_device has no sparse-similarity form yet: "
-            "similarity='topk' runs staged-only — call cluster()/"
-            "cluster_batch() (they route it to the staged path), or "
-            "fused=False explicitly; DESIGN.md §13.5 documents the "
-            "limitation")
+    if mesh is not None:
+        from repro.core import distributed as dist_mod  # lazy: no cycle
+        return dist_mod.run_pipeline_sharded(
+            X_or_S, config, mesh, is_similarity=is_similarity, caps=caps)
     arr = jnp.asarray(X_or_S, jnp.float32)
     if batched is None:
         batched = arr.ndim == 3
@@ -210,10 +236,14 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
                 f"ambiguous: pass is_similarity= explicitly")
 
     def build():
-        one = _fused_one(config, is_similarity)
+        if _needs_approx_body(config):
+            one = _fused_approx_one(config, is_similarity,
+                                    int(arr.shape[-2]), caps)
+        else:
+            one = _fused_one(config, is_similarity)
         return jax.jit(jax.vmap(one) if batched else one)
 
-    key = ("fused", config, is_similarity, batched, arr.shape)
+    key = ("fused", config, is_similarity, batched, arr.shape, caps)
     # the runtime recompile watchdog (DESIGN.md §15.2): a key already in
     # the executable cache is a REPLAY — if XLA compiles a new program
     # under it anyway, that is the BENCH_5 failure mode happening in
@@ -244,6 +274,8 @@ def _result_from_fused(host: DeviceOutputs, b: Optional[int] = None,
         dict(direction=host.direction, conv_mask=host.conv_mask,
              cluster_of=host.cluster_of, bubble_of=host.bubble_of,
              D=host.apsp, Z=host.linkage), b)
+    if host.hubs is not None:
+        res.hubs = np.asarray(pick(host.hubs))
     kk = k if k is not None else len(res.converging)
     return ClusterResult(
         labels=res.labels(kk), linkage=res.linkage, tmfg=tm, dbht=res,
@@ -266,7 +298,7 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             backend: Optional[str] = None,
             variant: Optional[str] = None, reuse_tmfg=None,
             dbht_impl: Optional[str] = None, fused: Optional[bool] = None,
-            collect_timings: bool = False) -> ClusterResult:
+            mesh=None, collect_timings: bool = False) -> ClusterResult:
     """Cluster time series X (n, L) — or a precomputed similarity S — with
     TMFG-DBHT.  ``k`` cuts the dendrogram into k flat clusters (defaults to
     the number of converging bubbles).
@@ -277,6 +309,10 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
     are a deprecated shim resolved through the same funnel (defaults —
     lazy/10/64/hub/auto/device — come from the dataclass; combining
     them with ``config=`` is rejected, use ``config.replace(...)``).
+
+    ``mesh`` routes the fused program through the multi-device funnel
+    (``repro.core.distributed.run_pipeline_sharded``); the staged path
+    (``fused=False``) is single-device and ignores it.
 
     ``fused`` selects the execution plan: the default (None) runs the
     whole pipeline as ONE jitted device program + one transfer
@@ -298,18 +334,15 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = (cfg.dbht_impl == "device" and reuse_tmfg is None
-                and cfg.similarity == "dense"
-                and cfg.apsp_method != "sparse")
+    can_fuse = cfg.dbht_impl == "device" and reuse_tmfg is None
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device', no reuse_tmfg, "
-            "similarity='dense', and a dense APSP method (the staged "
-            "path is the host/warm-start mode; the topk similarity path "
-            "is staged-only for now — DESIGN.md §13 — and the sparse "
-            "APSP+DBHT tail is host-orchestrated by design, §14.6)")
+            "fused=True requires dbht_impl='device' and no reuse_tmfg "
+            "(the staged path is the host-oracle/warm-start mode; "
+            "fused=False also remains the per-stage-timings mode, "
+            "DESIGN.md §12.4)")
 
     if fused:
         # fence=False: the fused path's one device_get IS its sync —
@@ -326,10 +359,30 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
                 assert X is not None, "need X, S or moments"
                 arr, have_S = jnp.asarray(np.asarray(X), jnp.float32), False
             out = run_pipeline_device(arr, cfg, is_similarity=have_S,
-                                      batched=False)
+                                      batched=False, mesh=mesh)
             host = jax.device_get(out)
+        if host.overflow is not None and bool(np.any(np.asarray(
+                host.overflow))):
+            # the partition exceeded the fused slot-grid caps (§17.3):
+            # the staged sparse tail sizes its programs per cluster, so
+            # it is correct at any partition — rerun there
+            return cluster(X, S=S, moments=moments, k=k, config=cfg,
+                           fused=False, collect_timings=collect_timings)
         _observe_total("fused", sp.duration)
         timings = {"total": sp.duration}
+        if host.counters is not None:
+            # same diagnostics the staged approx path surfaces (§13.3),
+            # materialized with the one fused transfer
+            lk = int(host.counters.lookups)
+            fb = int(host.counters.fallbacks)
+            pm = int(host.counters.pair_misses)
+            obs_metrics.counter("approx_lookups_total").inc(lk)
+            obs_metrics.counter("approx_fallbacks_total").inc(fb)
+            obs_metrics.counter("approx_pair_misses_total").inc(pm)
+            if collect_timings:
+                timings["sim_fallbacks"] = float(fb)
+                timings["sim_fallback_rate"] = fb / max(lk, 1)
+                timings["sim_pair_misses"] = float(pm)
         return _result_from_fused(
             host, k=k, timings=timings if collect_timings else None)
 
@@ -570,16 +623,14 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = (cfg.dbht_impl == "device" and cfg.similarity == "dense"
-                and cfg.apsp_method != "sparse")
+    can_fuse = cfg.dbht_impl == "device"
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device', similarity='dense', "
-            "and a dense APSP method (the topk path is staged-only for "
-            "now — DESIGN.md §13 — and the sparse APSP+DBHT tail is "
-            "host-orchestrated by design, §14.6)")
+            "fused=True requires dbht_impl='device' (the staged path is "
+            "the host-oracle mode; fused=False also remains the "
+            "per-stage-timings mode, DESIGN.md §12.4)")
 
     timings: Dict[str, float] = {}
     if S is None:
@@ -609,8 +660,27 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
             # ONE transfer, sliced to B_out first so pad entries of a
             # bucketed micro-batch never cross the boundary
             host = jax.device_get(jax.tree.map(lambda a: a[:B_out], out))
+        if host.overflow is not None and bool(np.any(np.asarray(
+                host.overflow))):
+            # any entry past the fused slot-grid caps (§17.3) sends the
+            # whole batch to the staged path (per-cluster-sized programs)
+            return cluster_batch(X, S=S, k=k, config=cfg, mesh=mesh,
+                                 limit=limit, fused=False,
+                                 collect_timings=collect_timings)
         total = sp.duration
         _observe_total("fused", total)
+        if host.counters is not None:
+            # batch-summed diagnostics, as on the staged path (§13.3)
+            lk = float(np.sum(np.asarray(host.counters.lookups)))
+            fb = float(np.sum(np.asarray(host.counters.fallbacks)))
+            pm = float(np.sum(np.asarray(host.counters.pair_misses)))
+            obs_metrics.counter("approx_lookups_total").inc(lk)
+            obs_metrics.counter("approx_fallbacks_total").inc(fb)
+            obs_metrics.counter("approx_pair_misses_total").inc(pm)
+            if collect_timings:
+                timings["sim_fallbacks"] = fb
+                timings["sim_fallback_rate"] = fb / max(lk, 1.0)
+                timings["sim_pair_misses"] = pm
         per = {"total": total / B}
         results = [
             _result_from_fused(host, b=b, k=k,

@@ -494,7 +494,7 @@ def densify(D_h, graph: CSRGraph, *, backend: str = "auto") -> jax.Array:
 
 
 def dbht_sparse(S, tmfg, *, edge_weights=None, n_hubs: int = 0,
-                rounds: int = 32, backend: str = "auto",
+                rounds: int = 0, backend: str = "auto",
                 impl: str = "device", bm: int = PANEL_ROWS,
                 hac_max: int = SPARSE_EXACT_HAC_MAX):
     """DBHT from the TMFG edge list + hub APSP factor; never (n, n).

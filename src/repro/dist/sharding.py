@@ -152,6 +152,71 @@ def pearson_shardmap(X: jax.Array, mesh: Mesh, axis="data") -> jax.Array:
         out_specs=similarity_spec(axis))(X)
 
 
+def topk_pearson_sharded(X: jax.Array, k: int, mesh: Mesh, axis="data",
+                         *, bm: int = 512):
+    """Blocked top-K Pearson with X row-sharded (DESIGN.md §17.4).
+
+    Each device owns a row panel: standardize local rows, all-gather
+    the standardized series (the one collective), then scan ``bm``-row
+    sub-panels of the local block — per sub-panel one (bm, n) full-width
+    matmul and ONE ``lax.top_k``.  This is exactly the single-device
+    ``kernels.topk.topk_pearson_jnp`` scan restricted to the local
+    rows, so the table is bitwise the single-device table (value desc,
+    index asc tie order) with no running merge at all.  An earlier
+    column-tiled formulation kept a per-tile O(K) merge; the per-tile
+    ``top_k`` + merge cost ~8x more than the full-width scan on CPU,
+    so the row-panel form is both the parity argument and the fast one.
+
+    Returns ``(values (n, k), indices (n, k), Z (n, L))`` — Z is the
+    standardized series the sparse TMFG's exact-value fallback reads.
+    Rows are padded to the axis size internally; pad rows never appear
+    as candidates.
+    """
+    from repro.kernels import ref as kref       # local import: no cycle
+    from repro.kernels.topk import NEG
+
+    X = jnp.asarray(X, jnp.float32)
+    n, L = X.shape
+    k = min(int(k), n - 1)
+    d = axis_size(mesh, axis)
+    pad = (-n) % d
+    if pad:
+        X = jnp.concatenate([X, jnp.zeros((pad, L), jnp.float32)])
+    n_pad = n + pad
+    n_loc = n_pad // d
+    bm_t = max(min(bm, n_loc), 1)
+    n_panels = -(-n_loc // bm_t)
+    row_pad = n_panels * bm_t - n_loc
+
+    def f(xl):
+        z = kref.standardize_rows(xl)                       # (n_loc, L)
+        zf = lax.all_gather(z, axis, tiled=True)            # (n_pad, L)
+        gid0 = lax.axis_index(axis) * n_loc
+        zp_all = jnp.concatenate(
+            [z, jnp.zeros((row_pad, L), jnp.float32)]) if row_pad else z
+        cols = jnp.arange(n_pad)
+
+        def panel(_, p0):
+            zp = lax.dynamic_slice(zp_all, (p0, 0), (bm_t, L))
+            s = jnp.clip(zp @ zf.T, -1.0, 1.0)              # (bm_t, n_pad)
+            rid = gid0 + p0 + jnp.arange(bm_t)
+            bad = (cols[None, :] == rid[:, None]) | (cols[None, :] >= n)
+            s = jnp.where(bad, NEG, s)
+            cv, ci = lax.top_k(s, k)
+            return None, (cv, ci.astype(jnp.int32))
+
+        starts = jnp.arange(n_panels, dtype=jnp.int32) * bm_t
+        _, (v, i) = lax.scan(panel, None, starts)
+        return (v.reshape(n_panels * bm_t, k)[:n_loc],
+                i.reshape(n_panels * bm_t, k)[:n_loc], zf)
+
+    v, i, z = shard_map(
+        f, mesh=mesh, in_specs=timeseries_spec(axis),
+        out_specs=(P(axis, None), P(axis, None), P()),
+        check_vma=False)(X)
+    return v[:n], i[:n], z[:n]
+
+
 def masked_argmax_shardmap(S: jax.Array, mask: jax.Array, mesh: Mesh,
                            axis="data", *, backend: str = "auto"):
     """Per-row masked (max, argmax) with S *row*-sharded: the gain-scan

@@ -185,23 +185,28 @@ def sparse_relax(D: jax.Array, graph: CSRGraph, *, backend: str = "auto",
 
 @functools.partial(jax.jit, static_argnames=("rounds", "backend", "be"))
 def sparse_apsp_sources(graph: CSRGraph, sources: jax.Array, *,
-                        rounds: int = 32, backend: str = "auto",
+                        rounds: int = 0, backend: str = "auto",
                         be: int = 8192) -> jax.Array:
     """Distances (s, n) from ``sources`` by iterated sparse relaxation.
 
     Frontier-style early exit: the while_loop stops as soon as a round
-    changes nothing (the fixed point), with ``rounds`` as the cap — the
-    same convergence contract as ``apsp_hub``'s Bellman-Ford scan
-    (extra rounds are no-ops; the TMFG's diameter is small in practice).
+    changes nothing (the fixed point) — the same convergence contract
+    as ``apsp_hub``'s Bellman-Ford loop.  ``rounds=0`` (the default)
+    caps at the true n-round bound; a nonzero cap truncates.  Unlike
+    dense min-plus, each sparse round extends paths by ONE edge hop, so
+    a fixed small cap (the old 32 default) left ``inf`` in every entry
+    farther than 32 hops from its source — TMFG hop-diameters pass 32
+    from n ≈ 1000, which shattered the sparse DBHT geometry downstream.
     """
     n = graph.n
     s = sources.shape[0]
+    cap = rounds if rounds else n
     D0 = jnp.full((s, n), INF, jnp.float32)
     D0 = D0.at[jnp.arange(s), sources].set(0.0)
 
     def cond(carry):
         i, _, changed = carry
-        return (i < rounds) & changed
+        return (i < cap) & changed
 
     def body(carry):
         i, D, _ = carry

@@ -20,4 +20,5 @@ from .cache import ResultCache, WarmStart, content_key  # noqa: F401
 from .scheduler import ClusterRequest, MicroBatcher, bucket_size  # noqa: F401
 from .service import ClusterService  # noqa: F401
 from .window import (WindowState, materialize, window_delta,  # noqa: F401
-                     window_init, window_push, window_similarity)
+                     window_init, window_push, window_push_block,
+                     window_similarity)

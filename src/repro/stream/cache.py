@@ -10,13 +10,21 @@ Two independent mechanisms, composed by service.py:
   subscribers ask for the same stream) are answered without touching
   the pipeline.
 * :class:`WarmStart` — rolling-window reuse.  Consecutive windows differ
-  by one tick, so their similarity matrices are close; when the max
-  elementwise delta to the previously clustered window is below
+  by one tick, so their similarity matrices are close; when the *mean*
+  absolute elementwise delta to the previously clustered window is below
   ``reuse_threshold`` the previous result is returned as-is, and below
   ``tmfg_threshold`` the previous TMFG topology is kept and only the
   (cheap, host-side) DBHT stage reruns on the new similarities.  Both
   thresholds default to 0.0 — exact streaming semantics unless the
   caller opts into approximation.
+
+  The gate is the mean, not the max: windowed Pearson estimates carry
+  O(1/√L) sampling noise per entry, so on any real stream *some* pair
+  of the n² always swings by ~1 between reclusters and a max-based
+  gate can never fire (BENCH_7's ``stream/service-warm`` showed
+  ``warm_hits: 0`` for exactly this reason).  The mean tracks how far
+  the window as a whole has moved — which is what TMFG topology
+  stability actually depends on.
 """
 
 from __future__ import annotations
@@ -144,9 +152,13 @@ class WarmStart:
 
     @staticmethod
     def _delta(S, base: Optional[np.ndarray]) -> float:
+        """Mean absolute elementwise delta (∞ when nothing recorded).
+        Mean, not max — a max gate is defeated by the O(1/√L) sampling
+        noise of any single windowed-correlation entry (see module
+        docstring)."""
         if base is None:
             return float("inf")
-        return float(np.max(np.abs(np.asarray(S) - base)))
+        return float(np.mean(np.abs(np.asarray(S) - base)))
 
     def delta(self, S) -> float:
         return self._delta(S, self._S)

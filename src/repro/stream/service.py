@@ -36,7 +36,8 @@ from repro.obs import trace as obs_trace
 from .admission import AdmissionConfig, AdmissionController, Ticket
 from .cache import ResultCache, WarmStart, content_key
 from .scheduler import ClusterRequest, MicroBatcher
-from .window import WindowState, window_init, window_push, window_similarity
+from .window import (WindowState, window_init, window_push_block,
+                     window_similarity)
 
 
 class ClusterService(ConfigFields):
@@ -83,6 +84,15 @@ class ClusterService(ConfigFields):
         self.recluster_every = recluster_every
         self.min_ticks = min_ticks if min_ticks is not None else window
         self.ticks = 0
+        # ticks buffered host-side, applied in one window_push_block
+        # dispatch at the next state read (similarity/submit) — per-tick
+        # device launches used to dominate the recluster cadence itself
+        # at bench scale (DESIGN.md §10.1).  The buffer also flushes
+        # whenever it reaches the recluster cadence so steady-state
+        # blocks keep ONE shape — distinct block sizes would each pay a
+        # jit trace (the §15.2 recompile watchdog would flag them)
+        self._pending: List[np.ndarray] = []
+        self._flush_block = recluster_every if recluster_every > 0 else 32
         self.latest: Optional[pipeline.ClusterResult] = None
         self._warm_k: Optional[int] = None
         self.warm_hits = 0
@@ -98,11 +108,21 @@ class ClusterService(ConfigFields):
 
     # -- streaming ----------------------------------------------------------
     def tick(self, x) -> Optional[ClusterRequest]:
-        """Ingest one (n,) observation; O(n²).  Auto-submits a recluster
-        of the current window every ``recluster_every`` ticks once
-        ``min_ticks`` observations have arrived (0 disables)."""
+        """Ingest one (n,) observation; O(n²) amortized.  Auto-submits a
+        recluster of the current window every ``recluster_every`` ticks
+        once ``min_ticks`` observations have arrived (0 disables).
+
+        The observation is buffered host-side and applied — together
+        with every other tick since the last state read — as ONE
+        ``window_push_block`` device call at the next ``similarity()``
+        / ``submit()``.  Bitwise the same state as tick-at-a-time
+        pushes (the block is a scan over the same transition); what it
+        removes is a per-tick device launch, which at bench scale cost
+        more than the reclustering itself.  Read ``self.state`` only
+        through :meth:`similarity`/:meth:`_flush_ticks`.
+        """
         t0 = time.perf_counter()
-        self.state = window_push(self.state, np.asarray(x, np.float32))
+        self._pending.append(np.asarray(x, np.float32))
         self.ticks += 1
         # host-side fill tracking — reading state.count would sync the device
         filled = min(self.ticks, self.state.capacity)
@@ -110,13 +130,24 @@ class ClusterService(ConfigFields):
         if (self.recluster_every > 0
                 and filled >= self.min_ticks
                 and self.ticks % self.recluster_every == 0):
-            out = self.submit()
+            out = self.submit()                    # flushes via similarity()
+        elif len(self._pending) >= self._flush_block:
+            self._flush_ticks()
         self._m_tick.observe(time.perf_counter() - t0)
         return out
 
+    def _flush_ticks(self) -> WindowState:
+        """Apply buffered ticks (one block dispatch) and return the
+        up-to-date window state."""
+        if self._pending:
+            X = np.stack(self._pending, axis=1)
+            self.state = window_push_block(self.state, X)
+            self._pending.clear()
+        return self.state
+
     def similarity(self) -> np.ndarray:
         """Current window's (n, n) Pearson matrix from the co-moments."""
-        return np.asarray(window_similarity(self.state))
+        return np.asarray(window_similarity(self._flush_ticks()))
 
     # -- request path -------------------------------------------------------
     def submit(self, S=None, *, k: Optional[int] = None,

@@ -107,25 +107,9 @@ def _full_moments(buf: jax.Array, ref: jax.Array, dt):
     return ref, s1, jnp.zeros_like(s1), s2, jnp.zeros_like(s2)
 
 
-@jax.jit
-def window_push(st: WindowState, x: jax.Array) -> WindowState:
-    """Append tick x (n,) — evicting the oldest when full — in O(n²)
-    amortized.
-
-    The shift origin ``ref`` starts at the first tick, and is
-    *re-anchored to the newest tick* every time the ring completes a
-    full pass: levels that random-walk away from the original anchor
-    would otherwise re-grow the mean² ≫ var cancellation the shift
-    exists to prevent.  The refresh recomputes the moments from the ring
-    buffer — O(n²L) once every L ticks, i.e. O(n²) amortized, the same
-    order as the incremental update — and also discards any error the
-    rank-1 stream accumulated, so precision is bounded by the drift
-    *within one window*, not the lifetime of the stream.
-
-    Between refreshes the update is rank-1: the outgoing column at
-    ``head`` contributes only once the ring has wrapped, and both
-    contributions go through one compensated add per state sum.
-    """
+def _push_step(st: WindowState, x: jax.Array) -> WindowState:
+    """One append+evict transition — the body shared (bitwise) by
+    ``window_push`` and the scan inside ``window_push_block``."""
     L = st.buf.shape[1]
     x = x.astype(jnp.float32)
     ref = jnp.where(st.count == 0, x, st.ref)
@@ -151,6 +135,48 @@ def window_push(st: WindowState, x: jax.Array) -> WindowState:
         None)
     return WindowState(buf=buf, head=head, count=count, ref=ref,
                        s1=s1, c1=c1, s2=s2, c2=c2)
+
+
+@jax.jit
+def window_push(st: WindowState, x: jax.Array) -> WindowState:
+    """Append tick x (n,) — evicting the oldest when full — in O(n²)
+    amortized.
+
+    The shift origin ``ref`` starts at the first tick, and is
+    *re-anchored to the newest tick* every time the ring completes a
+    full pass: levels that random-walk away from the original anchor
+    would otherwise re-grow the mean² ≫ var cancellation the shift
+    exists to prevent.  The refresh recomputes the moments from the ring
+    buffer — O(n²L) once every L ticks, i.e. O(n²) amortized, the same
+    order as the incremental update — and also discards any error the
+    rank-1 stream accumulated, so precision is bounded by the drift
+    *within one window*, not the lifetime of the stream.
+
+    Between refreshes the update is rank-1: the outgoing column at
+    ``head`` contributes only once the ring has wrapped, and both
+    contributions go through one compensated add per state sum.
+    """
+    return _push_step(st, x)
+
+
+@jax.jit
+def window_push_block(st: WindowState, X: jax.Array) -> WindowState:
+    """Apply a block of B pending ticks (columns of X, (n, B), oldest
+    first) in ONE device dispatch.
+
+    Bitwise-identical to B sequential ``window_push`` calls — the block
+    is a ``lax.scan`` over the same ``_push_step`` transition, so every
+    Kahan compensation and ring re-anchor happens in the same order.
+    What changes is the dispatch count: at bench scale the per-call
+    launch overhead of tick-at-a-time pushes costs more than the
+    clustering work itself (BENCH_7 ``stream/service*`` losing to
+    scratch at 0.58–0.61×), so the service buffers ticks host-side and
+    flushes them here before any state read.
+    """
+    def step(s, x):
+        return _push_step(s, x), None
+    out, _ = jax.lax.scan(step, st, X.T.astype(jnp.float32))
+    return out
 
 
 @jax.jit
@@ -185,12 +211,14 @@ def window_similarity(st: WindowState) -> jax.Array:
 
 
 def window_delta(st: WindowState, S_prev, S_now=None) -> float:
-    """max |S_now − S_prev| — the similarity delta the warm-start cache
-    thresholds on (DESIGN.md §10.3).  ``S_now`` defaults to the state's
-    current similarity."""
+    """mean |S_now − S_prev| — the similarity delta the warm-start cache
+    thresholds on (DESIGN.md §10.3; mean rather than max because any
+    single windowed-correlation entry carries O(1/√L) sampling noise —
+    see stream/cache.py).  ``S_now`` defaults to the state's current
+    similarity."""
     if S_now is None:
         S_now = window_similarity(st)
-    return float(jnp.max(jnp.abs(jnp.asarray(S_now) - jnp.asarray(S_prev))))
+    return float(jnp.mean(jnp.abs(jnp.asarray(S_now) - jnp.asarray(S_prev))))
 
 
 def materialize(st: WindowState) -> np.ndarray:

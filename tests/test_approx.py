@@ -6,13 +6,15 @@ Pins of ISSUE 5's acceptance criteria:
     every named variant, from X and from S, batched and unbatched, down
     to degenerate n=4/n=5;
   * the memory contract — the similarity+TMFG program of the approx
-    path contains NO (n, n) buffer (jaxpr shape check; the DBHT/APSP
-    stage's dense distance matrices are the documented §13.5 boundary);
+    path contains NO (n, n) buffer (jaxpr shape check; since ISSUE 9
+    the whole fused ``.approx()`` program carries the same guarantee —
+    tests/test_property.py pins it end to end);
   * the quality floor — ARI ≥ 0.9 of the dense path's ARI on the
     synthetic regime data at sim_k = 32;
   * the wiring — config validation, content-key/batching-key inclusion,
-    the staged-only fused rejection, and the stream service running an
-    approx config end to end.
+    the fused end-to-end approx path (ISSUE 9 retired the staged-only
+    §13.5 rejection), and the stream service running an approx config
+    end to end.
 """
 
 import numpy as np
@@ -378,18 +380,21 @@ class TestApproxWiring:
         assert all(r.done for r in done)
         assert mb.batches_run == 2
 
-    def test_fused_path_rejects_topk_with_clear_error(self):
+    def test_fused_path_accepts_topk_end_to_end(self):
+        """ISSUE 9 acceptance: the §13.5 staged-only boundary is
+        retired — run_pipeline_device takes PipelineConfig.approx()
+        and the fused default equals the staged path bitwise."""
         _, X, _ = clustered_similarity(24, k=2, seed=1)
         cfg = PipelineConfig.approx(sim_k=8)
-        with pytest.raises(ValueError, match="staged-only"):
-            cluster(X, config=cfg, fused=True)
-        with pytest.raises(ValueError, match="staged-only"):
-            cluster_batch(X[None], config=cfg, fused=True)
-        with pytest.raises(ValueError, match="staged-only"):
-            run_pipeline_device(np.asarray(X, np.float32), cfg)
-        # default fused=None silently takes the staged path
-        res = cluster(X, k=2, config=cfg)
-        assert res.labels.shape == (24,)
+        out = run_pipeline_device(np.asarray(X, np.float32), cfg,
+                                  is_similarity=False)
+        assert out.linkage.shape == (23, 4)
+        fz = cluster(X, k=2, config=cfg, fused=True)
+        st = cluster(X, k=2, config=cfg, fused=False)
+        np.testing.assert_array_equal(fz.labels, st.labels)
+        np.testing.assert_array_equal(fz.linkage, st.linkage)
+        bf = cluster_batch(X[None], k=2, config=cfg, fused=True)
+        np.testing.assert_array_equal(bf.labels[0], st.labels)
 
     def test_reuse_tmfg_needs_materialized_similarity(self):
         S, X, _ = clustered_similarity(24, k=2, seed=2)

@@ -43,6 +43,7 @@ def test_design_md_exists_and_has_sections():
                  "14", "14.1", "14.2", "14.3", "14.4", "14.5", "14.6",
                  "15", "15.1", "15.2", "15.3", "15.4",
                  "16", "16.1", "16.2", "16.3", "16.4",
+                 "17", "17.1", "17.2", "17.3", "17.4",
                  "Arch-applicability"):
         assert must in sections, f"DESIGN.md lost §{must}"
 
@@ -106,6 +107,31 @@ def test_admission_sections_are_cited_from_code():
     refs = _cited_refs()
     for sub in ("16", "16.1", "16.2", "16.3", "16.4"):
         assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_fused_approx_sections_are_cited_from_code():
+    """§17's spec stays honest the same way (ISSUE 9): the in-program
+    panel sweep, the device Euler tour/direction sums, the slot-grid
+    HAC and the sharded funnel must each be cited from at least one
+    docstring in src/tests/benchmarks."""
+    refs = _cited_refs()
+    for sub in ("17", "17.1", "17.2", "17.3", "17.4"):
+        assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_readme_and_api_document_fused_approx():
+    """The fused approx surface stays documented: README's quickstart
+    runs `.approx()` through the fused default (no staged-only caveat),
+    docs/api.md covers the sharded funnel and the fused
+    `run_pipeline_device` topk acceptance."""
+    readme = (ROOT / "README.md").read_text()
+    assert "PipelineConfig.approx" in readme
+    assert "staged-only" not in readme, \
+        "README still carries the retired staged-only approx caveat"
+    api = (ROOT / "docs" / "api.md").read_text()
+    for name in ("topk_pearson_sharded", "run_pipeline_sharded",
+                 "fused_approx"):
+        assert name in api, f"docs/api.md lost {name}"
 
 
 def test_readme_and_api_document_admission():

@@ -11,7 +11,13 @@ the repo's cross-implementation contracts on it —
   * sparse == hub APSP (§14.5): ``apsp_sparse(n_hubs=h)`` is BITWISE
     ``apsp_hub`` at the same hub count;
   * full-K approx exactness (§13.3) and device/host DBHT parity
-    (§11.4) on the drawn ``sim_k``/``dbht_impl``.
+    (§11.4) on the drawn ``sim_k``/``dbht_impl``;
+  * fused-topk parity (§17, ISSUE 9): ``PipelineConfig.approx()`` run
+    as ONE jitted device program equals the staged approx path on the
+    drawn case, the whole fused program's jaxpr holds no (n, n) array,
+    and the 4-device sharded funnel equals the single-device program
+    (subprocess, like tests/test_distributed.py — conftest pins the
+    main process to one device).
 
 The draw is a pure function of the seed (``draw_case``), so any
 failure reproduces from its seed alone; ``PINNED_SEEDS`` is the
@@ -22,10 +28,15 @@ with more seeds: ``REPRO_PROPERTY_SEEDS=32 pytest tests/test_property.py``.
 """
 
 import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
 
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from conftest import clustered_similarity, tmfg_f32
@@ -124,3 +135,107 @@ def test_full_k_topk_and_impl_agree_with_dense_device(seed):
                                   err_msg=f"case {c} (full-K parity)")
     np.testing.assert_array_equal(base.linkage, approx.linkage,
                                   err_msg=f"case {c} (full-K parity)")
+
+
+# ---------------------------------------------------------------------------
+# fused-topk (§17, ISSUE 9): end-to-end fused approx vs staged, the
+# no-(n, n) jaxpr pin, and 4-device sharded == single-device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", PINNED_SEEDS)
+def test_fused_approx_matches_staged_drawn_config(seed):
+    """§17 parity on the drawn (n, B, k, sim_k): the one-program fused
+    ``PipelineConfig.approx()`` run equals the staged approx path —
+    labels AND linkage bitwise — batched and unbatched, from X and
+    from a precomputed similarity."""
+    c = draw_case(seed)
+    rng = np.random.default_rng(c["seed"] + 1_000_003)
+    sim_k = int(rng.integers(8, c["n"] - 1))
+    cfg = PipelineConfig.approx(sim_k=sim_k)
+    Xs = [make_dataset(c["n"], 40, 3, noise=0.7,
+                       seed=c["data_seed"] + b)[0] for b in range(c["B"])]
+    fused = cluster(Xs[0], k=c["k"], config=cfg)
+    staged = cluster(Xs[0], k=c["k"], config=cfg, fused=False)
+    _assert_result_equal(fused, staged, msg=f"case {c} sim_k={sim_k}")
+    bf = cluster_batch(np.stack(Xs), k=c["k"], config=cfg, fused=True)
+    bs = cluster_batch(np.stack(Xs), k=c["k"], config=cfg, fused=False)
+    for b in range(c["B"]):
+        _assert_result_equal(bf[b], bs[b],
+                             msg=f"case {c} sim_k={sim_k} entry {b}")
+    # from-S entry: the topk table drawn from a precomputed similarity
+    S = np.corrcoef(Xs[0]).astype(np.float32)
+    fS = cluster(S=S, k=c["k"], config=cfg)
+    sS = cluster(S=S, k=c["k"], config=cfg, fused=False)
+    _assert_result_equal(fS, sS, msg=f"case {c} sim_k={sim_k} from-S")
+
+
+def test_fused_approx_program_never_materializes_dense_square():
+    """The §17 memory contract: the WHOLE fused ``.approx()`` program —
+    topk scan, lazy-gain TMFG, hub-factor APSP, panel sweep, slot-grid
+    HAC, linkage assembly — holds no (n, n) array for any dtype.  n=777
+    is chosen to collide with none of the internal tile sizes (bm=512,
+    power-of-two HAC tiers).  The dense pipeline's program is the
+    positive control: the same detector trips on it."""
+    from repro.core import fused_approx as fa
+    n, L = 777, 40
+    X = jax.random.normal(jax.random.PRNGKey(2), (n, L), jnp.float32)
+    cfg = PipelineConfig.approx(sim_k=64)
+    text = str(jax.make_jaxpr(fa.fused_one(cfg, False, n))(X))
+    assert f"[{n},{n}]" not in text, \
+        "fused approx program allocates an (n, n) buffer"
+    dense_text = str(jax.make_jaxpr(
+        fa.fused_one(PipelineConfig.opt(), False, n))(X))
+    assert f"f32[{n},{n}]" in dense_text       # detector works
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 4
+    from repro.core.config import PipelineConfig
+    from repro.core.pipeline import (cluster, run_pipeline_device,
+                                     _result_from_fused)
+    from repro.dist import sharding as sh
+    from repro.kernels.topk import topk_pearson_jnp
+    from repro.data.timeseries import make_dataset
+
+    mesh = sh.data_mesh(4)
+    for n, K in ((96, 16), (50, 8)):           # even and ragged row panels
+        X, _ = make_dataset(n, 40, 3, noise=0.7, seed=5 + n)
+        v1, i1 = topk_pearson_jnp(jnp.asarray(X, jnp.float32), K)
+        v4, i4, _ = sh.topk_pearson_sharded(np.asarray(X, np.float32),
+                                            K, mesh)
+        assert np.array_equal(np.asarray(v1), np.asarray(v4)), n
+        assert np.array_equal(np.asarray(i1), np.asarray(i4)), n
+
+    X, _ = make_dataset(96, 40, 3, noise=0.7, seed=101)
+    cfg = PipelineConfig.approx(sim_k=16)
+    out = run_pipeline_device(np.asarray(X, np.float32), cfg,
+                              is_similarity=False, mesh=mesh)
+    sharded = _result_from_fused(jax.device_get(out), k=3)
+    single = cluster(X, k=3, config=cfg)
+    staged = cluster(X, k=3, config=cfg, fused=False)
+    assert np.array_equal(sharded.labels, single.labels)
+    assert np.array_equal(np.asarray(sharded.linkage),
+                          np.asarray(single.linkage))
+    assert np.array_equal(single.labels, staged.labels)
+    mres = cluster(X, k=3, config=cfg, mesh=mesh)    # cluster() funnel
+    assert np.array_equal(mres.labels, single.labels)
+    print("FUSED-SHARDED-OK")
+""")
+
+
+def test_fused_sharded_matches_single_device():
+    """§17.4: the sharded topk funnel — row-panel ``topk_pearson_sharded``
+    feeding the fused tail — equals the single-device fused program and
+    the staged path bitwise on a forced 4-device host mesh."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = str(
+        Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT], capture_output=True,
+        text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "FUSED-SHARDED-OK" in proc.stdout

@@ -307,20 +307,22 @@ def test_cluster_approx_sparse_never_needs_S():
     assert ax.dbht.hubs is not None
 
 
-def test_fused_rejects_sparse_with_narrower_error():
+def test_fused_accepts_sparse_apsp_end_to_end():
+    """ISSUE 9 acceptance: the §14.6 boundary is retired — the sparse
+    APSP+DBHT tail lowers into the fused program (DESIGN.md §17) and
+    matches the staged host-orchestrated tail."""
     from repro.core.pipeline import run_pipeline_device
     cfg = PipelineConfig(apsp_method="sparse", topk=0)
     S, X, _ = clustered_similarity(24, k=2, seed=2)
-    with pytest.raises(ValueError, match="host-orchestrated"):
-        run_pipeline_device(np.asarray(S, np.float32), cfg,
-                            is_similarity=True)
-    with pytest.raises(ValueError, match="sparse"):
-        cluster(X, config=cfg, fused=True)
-    with pytest.raises(ValueError, match="sparse"):
-        cluster_batch(X[None], config=cfg, fused=True)
-    # default fused=None silently takes the staged path
-    res = cluster(X, k=2, config=cfg)
-    assert res.labels.shape == (24,)
+    out = run_pipeline_device(np.asarray(S, np.float32), cfg,
+                              is_similarity=True)
+    assert out.hubs is not None and out.apsp.shape[0] < 24
+    fz = cluster(X, k=2, config=cfg, fused=True)
+    st = cluster(X, k=2, config=cfg, fused=False)
+    np.testing.assert_array_equal(fz.labels, st.labels)
+    np.testing.assert_array_equal(fz.linkage, st.linkage)
+    bf = cluster_batch(X[None], k=2, config=cfg, fused=True)
+    np.testing.assert_array_equal(bf.labels[0], st.labels)
 
 
 @pytest.mark.parametrize("from_x", [False, True])

@@ -18,7 +18,7 @@ from repro.kernels import ops
 from repro.stream import (ClusterService, MicroBatcher, ResultCache,
                           WarmStart, bucket_size, content_key, materialize,
                           window_delta, window_init, window_push,
-                          window_similarity)
+                          window_push_block, window_similarity)
 
 
 def _ticks(n, T, seed=0):
@@ -418,6 +418,58 @@ class TestClusterService:
         assert warm.reused_tmfg and not first.reused_tmfg
         np.testing.assert_array_equal(svc.warm._S, S_warm)
         np.testing.assert_array_equal(svc.warm._S_topo, S_first)
+
+    def test_block_push_is_bitwise_sequential(self):
+        """window_push_block is a scan over the same transition as
+        window_push — every state leaf must match bitwise, including the
+        Kahan compensation terms and a mid-block ring re-anchor."""
+        n, L, B = 12, 16, 21                       # B > L: wraps + re-anchors
+        cols = [c for c in _ticks(n, B, seed=11)]
+        st_seq = st_blk = window_init(n, L)
+        for x in cols:
+            st_seq = window_push(st_seq, x)
+        st_blk = window_push_block(st_blk, np.stack(cols, axis=1))
+        for a, b in zip(st_seq, st_blk):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_buffered_ticks_flush_before_state_reads(self):
+        """tick() buffers host-side; any state read (similarity) must
+        first apply the pending block so results never go stale."""
+        n, W = 8, 16
+        X = np.stack(list(_ticks(n, 6, seed=12)), axis=1)
+        svc = ClusterService(n=n, window=W, k=2)
+        for t in range(6):
+            svc.tick(X[:, t])
+        assert len(svc._pending) == 6              # buffered, not applied
+        S = svc.similarity()
+        assert len(svc._pending) == 0              # flushed by the read
+        st = window_init(n, W)
+        for t in range(6):
+            st = window_push(st, X[:, t])
+        np.testing.assert_array_equal(S, np.asarray(window_similarity(st)))
+
+    def test_warm_service_beats_scratch_on_bench_scenario(self):
+        """ISSUE 9 satellite regression: the BENCH_7 failure mode was
+        ``stream/service-warm`` at recluster_speedup=0.58 with
+        warm_hits=0 — the warm tiers never engaged (max-|ΔS| gate
+        unreachable under windowed-correlation sampling noise) and
+        per-tick device dispatches swamped the recluster work.  Pin the
+        fix: on the same bench scenario the warm tiers must fire AND
+        the warm service must beat from-scratch reclustering."""
+        from benchmarks.bench_stream import _service_rows
+        # best-of-3: host jitter only ever slows a run down, so the best
+        # attempt is the honest measurement (first attempt also absorbs
+        # any compile not yet cached in this process)
+        best, warm = 0.0, None
+        for _ in range(3):
+            rows = _service_rows(0.05)
+            warm = next(r for r in rows
+                        if r["name"] == "stream/service-warm")
+            assert warm["warm_hits"] > 0           # the tiers must engage
+            best = max(best, float(warm["derived"].split("=")[1]))
+            if best > 1.0:
+                break
+        assert best > 1.0, f"warm service lost to scratch: {warm}"
 
     def test_requests_compare_by_identity(self):
         """Regression: two uid=-1 requests must not raise on == (the S
