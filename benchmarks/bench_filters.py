@@ -1,0 +1,107 @@
+"""Filter matrix: per-filter build time + end-to-end quality (§18).
+
+Three row groups:
+
+  * ``filters/build/*`` — device build time of each filter graph over
+    one (n, n) similarity, with the ``compile_s``/``run_s`` split
+    (``measured()``, DESIGN.md §15.2).  PMFG is host-orchestrated
+    (§18.3) and capped at a small n; it reports wall time in ``run_s``
+    with ``compile_s=0`` (its device stage is one argsort).
+  * ``filters/quality/*`` — ARI vs the regime truth, edge count, edge
+    sum and TMFG-relative recall per filter on the clustered regime
+    generator (``filters/quality.py``, §18.5).
+  * ``filters/mst_speedup`` — MST-vs-TMFG build speedup at
+    n = 2000·scale: the ISSUE 10 acceptance row (MST's n-1-edge
+    Borůvka rounds must build ≥5x faster than the 3n-6-edge TMFG
+    insertion loop at full scale).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.tmfg import build_tmfg
+from repro.data.timeseries import make_dataset
+from repro.filters import ag_edge_count, build_ag, build_mst, build_pmfg
+from repro.filters.quality import compare_filters
+from .common import emit, measured
+
+PMFG_CAP = 120          # host planarity checks: keep the reference honest
+
+
+def run(scale: float = 1.0):
+    rows = []
+
+    # ---- build-time rows (one mid-size similarity) ----------------------
+    n = max(int(400 * scale), 32)
+    X, _ = make_dataset(n, 64, 5, noise=0.7, seed=0)
+    S = jnp.asarray(np.corrcoef(X), jnp.float32)
+
+    legs = {
+        "tmfg": lambda: build_tmfg(S, method="lazy", topk=64).edges,
+        "mst": lambda: build_mst(S).edges,
+        "ag": lambda: build_ag(S, m=ag_edge_count(n, 0)).edges,
+    }
+    for name, fn in legs.items():
+        m = measured(fn)
+        rows.append(dict(
+            name=f"filters/build/{name}", us_per_call=f"{m['run_s']*1e6:.0f}",
+            derived=f"n={n}", compile_s=f"{m['compile_s']:.3f}",
+            run_s=f"{m['run_s']:.4f}", cold_s=f"{m['cold_s']:.3f}",
+            replay_recompiles=m["replay_recompiles"]))
+
+    n_p = min(n, PMFG_CAP)
+    S_p = S[:n_p, :n_p]
+    build_pmfg(S_p)                              # warm the device argsort
+    t0 = time.perf_counter()
+    build_pmfg(S_p)
+    t_pmfg = time.perf_counter() - t0
+    rows.append(dict(
+        name="filters/build/pmfg", us_per_call=f"{t_pmfg*1e6:.0f}",
+        derived=f"n={n_p} (host reference, §18.3)", compile_s="0.000",
+        run_s=f"{t_pmfg:.4f}", cold_s=f"{t_pmfg:.3f}",
+        replay_recompiles=0))
+
+    # ---- quality rows (regime generator, §18.5) -------------------------
+    nq = max(int(120 * scale), 32)
+    Xq, labels = make_dataset(nq, 96, 4, noise=0.7, seed=1)
+    t0 = time.perf_counter()
+    qual = compare_filters(Xq, labels, k=4)
+    q_wall = time.perf_counter() - t0
+    for fname, q in qual.items():
+        rows.append(dict(
+            name=f"filters/quality/{fname}", us_per_call="",
+            derived=f"ari={q['ari']:.3f}",
+            ari=f"{q['ari']:.3f}", ari_vs_tmfg=f"{q['ari_vs_tmfg']:.3f}",
+            n_edges=q["n_edges"], edge_sum=f"{q['edge_sum']:.2f}",
+            edge_recall_vs_tmfg=f"{q['edge_recall_vs_tmfg']:.3f}",
+            compile_s="0.000", run_s=f"{q_wall / len(qual):.4f}",
+            replay_recompiles=0))
+
+    # ---- the acceptance row: MST vs TMFG at n = 2000·scale --------------
+    n_big = max(int(2000 * scale), 64)
+    Xb, _ = make_dataset(n_big, 48, 6, noise=0.7, seed=2)
+    Sb = jnp.asarray(np.corrcoef(Xb), jnp.float32)
+    m_tmfg = measured(lambda: build_tmfg(Sb, method="lazy", topk=64).edges,
+                      repeats=2)
+    m_mst = measured(lambda: build_mst(Sb).edges, repeats=2)
+    speedup = m_tmfg["run_s"] / max(m_mst["run_s"], 1e-9)
+    rows.append(dict(
+        name="filters/mst_speedup", us_per_call="",
+        derived=f"n={n_big} mst_x{speedup:.1f}_vs_tmfg",
+        tmfg_run_s=f"{m_tmfg['run_s']:.4f}", mst_run_s=f"{m_mst['run_s']:.4f}",
+        compile_s=f"{m_tmfg['compile_s'] + m_mst['compile_s']:.3f}",
+        run_s=f"{m_tmfg['run_s'] + m_mst['run_s']:.4f}",
+        replay_recompiles=(m_tmfg["replay_recompiles"]
+                           + m_mst["replay_recompiles"])))
+
+    return emit(rows, ["name", "us_per_call", "derived", "compile_s",
+                       "run_s", "replay_recompiles"])
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,7 @@ columns).  Sections:
   load  mixed-tenant admission overload drive (bench_load)
   pipeline  fused vs staged latency    (bench_pipeline)
   approx  dense vs top-K similarity    (bench_approx)
+  filters  per-filter build + quality  (bench_filters)
   roofline  dry-run roofline table     (roofline; needs results/dryrun)
 
 ``--strict`` turns section failures into a nonzero exit code (CI);
@@ -40,11 +41,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 import time
+from pathlib import Path
 
 from . import (bench_approx, bench_apsp, bench_ari, bench_breakdown,
-               bench_edgesum, bench_load, bench_pipeline,
+               bench_edgesum, bench_filters, bench_load, bench_pipeline,
                bench_sparse_apsp, bench_speedup, bench_stream,
                bench_tmfg, roofline)
 
@@ -60,11 +63,63 @@ SECTIONS = {
     "load": lambda scale: bench_load.run(scale),
     "pipeline": lambda scale: bench_pipeline.run(scale),
     "approx": lambda scale: bench_approx.run(scale),
+    "filters": lambda scale: bench_filters.run(scale),
     "roofline": lambda scale: roofline.run(),
 }
 
 # dry-run tables with no timed legs — nothing to split (DESIGN.md §15.4)
 SCHEMA_EXEMPT = {"roofline"}
+
+_STAMP_RE = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def load_trajectory(root="."):
+    """The committed ``BENCH_<pr>.json`` stamps, as (pr, data) pairs in
+    ascending PR order.
+
+    GAP-TOLERANT by construction: the stamps are globbed and sorted by
+    their embedded PR number, never indexed by an expected consecutive
+    sequence — PRs whose CI stamp was not committed (BENCH_8) simply
+    don't appear, and trajectory consumers must treat "previous stamp"
+    as "previous *available* stamp".  Files that don't match the
+    ``BENCH_<number>.json`` pattern are ignored."""
+    stamps = []
+    for p in Path(root).glob("BENCH_*.json"):
+        m = _STAMP_RE.match(p.name)
+        if not m:
+            continue
+        try:
+            stamps.append((int(m.group(1)), json.loads(p.read_text())))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# trajectory: skipping unreadable {p.name}: {e}",
+                  file=sys.stderr)
+    return sorted(stamps, key=lambda t: t[0])
+
+
+def print_trajectory(root=".") -> int:
+    """``--trajectory``: one line per available stamp — PR, scale,
+    sections present, failures — each compared against the previous
+    available stamp (NOT pr-1; see load_trajectory)."""
+    traj = load_trajectory(root)
+    if not traj:
+        print(f"# no BENCH_<pr>.json stamps under {root}", file=sys.stderr)
+        return 0
+    prev_secs = None
+    for pr, data in traj:
+        secs = sorted(s for s, rows in data.get("sections", {}).items()
+                      if isinstance(rows, list))
+        failed = data.get("failed", [])
+        delta = ""
+        if prev_secs is not None:
+            new = sorted(set(secs) - set(prev_secs))
+            gone = sorted(set(prev_secs) - set(secs))
+            delta = (f" (+{','.join(new)})" if new else "") + \
+                    (f" (-{','.join(gone)})" if gone else "")
+        print(f"BENCH_{pr}: scale={data.get('scale', '?')} "
+              f"sections={','.join(secs)}{delta}"
+              + (f" FAILED={','.join(failed)}" if failed else ""))
+        prev_secs = secs
+    return 0
 
 
 def check_schema(results) -> list:
@@ -115,7 +170,14 @@ def main(argv=None) -> int:
                     help="fail unless every run row carries the "
                          "compile_s/run_s split and every "
                          "replay_recompiles field is 0 (DESIGN.md §15.4)")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="list the committed BENCH_<pr>.json stamps "
+                         "(gap-tolerant: non-consecutive PR numbers are "
+                         "fine) and exit without benchmarking")
     args = ap.parse_args(argv)
+
+    if args.trajectory:
+        return print_trajectory()
 
     only = [s for s in args.only.split(",") if s] or list(SECTIONS)
     unknown = [s for s in only if s not in SECTIONS]

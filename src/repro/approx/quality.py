@@ -17,28 +17,14 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-import numpy as np
-
 from repro.core.ari import ari
 from repro.core.config import PipelineConfig
 from repro.core.pipeline import cluster
-
-
-def edge_set(edges) -> set:
-    """Undirected TMFG edge set as frozen (min, max) pairs."""
-    e = np.asarray(edges)
-    return {(int(min(a, b)), int(max(a, b))) for a, b in e}
-
-
-def edge_recall(edges_approx, edges_dense) -> float:
-    """|E_approx ∩ E_dense| / |E_dense| (both are 3n-6 edges)."""
-    ea, ed = edge_set(edges_approx), edge_set(edges_dense)
-    return len(ea & ed) / max(len(ed), 1)
-
-
-def edge_sum_ratio(edge_sum_approx: float, edge_sum_dense: float) -> float:
-    """Total-similarity-captured ratio (≤ ~1; equal at full K)."""
-    return float(edge_sum_approx) / float(edge_sum_dense)
+# the metric helpers generalized into the cross-filter harness
+# (repro.filters.quality, DESIGN.md §18.5); re-exported for the
+# kwarg-era callers of this module
+from repro.filters.quality import (edge_recall, edge_set,  # noqa: F401
+                                   edge_sum_ratio)
 
 
 def compare_to_dense(X, *, sim_k: int, k: Optional[int] = None,

@@ -47,6 +47,8 @@ _APSP_METHODS = ("exact", "hub", "sparse")
 _DBHT_IMPLS = ("device", "host")
 _BACKENDS = ("auto", "pallas", "interpret", "jnp")
 _SIMILARITIES = ("dense", "topk")
+_FILTERS = ("tmfg", "mst", "pmfg", "ag")
+_CLEANS = ("none", "rmt")
 
 
 @dataclass(frozen=True)
@@ -75,6 +77,18 @@ class PipelineConfig:
                    repro.approx subsystem; fuses end to end, §17).
       sim_k:       candidate-table width for similarity="topk"
                    (clamped to n-1 at runtime; must be 0 for "dense").
+      filter:      filter-graph front-end (DESIGN.md §18.1) — "tmfg"
+                   (the paper's object; the only one with DBHT's
+                   bubble tree) | "mst" | "pmfg" | "ag".  Non-TMFG
+                   filters cluster through the §18.4 edge-list tail;
+                   "pmfg" is the host-orchestrated reference and has
+                   no fused form.
+      clean:       correlation cleaning ahead of the similarity stage
+                   (DESIGN.md §18.2) — "none" | "rmt"
+                   (Marchenko–Pastur eigenvalue clipping; needs the
+                   raw series X for the (n, T) window shape).
+      ag_m:        edge budget for filter="ag"; 0 = the TMFG-matched
+                   default 3n-6 (must be 0 for other filters).
     """
 
     method: str = "lazy"
@@ -87,6 +101,9 @@ class PipelineConfig:
     dbht_impl: str = "device"
     similarity: str = "dense"
     sim_k: int = 0
+    filter: str = "tmfg"
+    clean: str = "none"
+    ag_m: int = 0
 
     def __post_init__(self):
         if self.method not in _METHODS:
@@ -114,6 +131,41 @@ class PipelineConfig:
             raise ValueError(
                 f"sim_k={self.sim_k} only applies to similarity='topk' "
                 f"(dense ignores it; set sim_k=0)")
+        if self.filter not in _FILTERS:
+            raise ValueError(f"unknown filter {self.filter!r}; "
+                             f"have {_FILTERS}")
+        if self.clean not in _CLEANS:
+            raise ValueError(f"unknown clean {self.clean!r}; "
+                             f"have {_CLEANS}")
+        if self.filter != "tmfg":
+            if self.similarity != "dense":
+                raise ValueError(
+                    f"filter={self.filter!r} needs similarity='dense': the "
+                    f"candidate-table machinery (DESIGN.md §13) is TMFG "
+                    f"construction — got similarity={self.similarity!r}")
+            if self.dbht_impl != "device":
+                raise ValueError(
+                    f"filter={self.filter!r} has no host DBHT walk: the "
+                    f"generic hierarchy tail is a device program "
+                    f"(DESIGN.md §18.4); use dbht_impl='device'")
+        if self.ag_m < 0:
+            raise ValueError(f"ag_m must be >= 0, got {self.ag_m}")
+        if self.ag_m > 0 and self.filter != "ag":
+            raise ValueError(
+                f"ag_m={self.ag_m} only applies to filter='ag' "
+                f"(other filters ignore it; set ag_m=0)")
+        if self.clean == "rmt" and self.similarity != "dense":
+            raise ValueError(
+                "clean='rmt' needs similarity='dense': eigenvalue "
+                "clipping acts on the materialized correlation matrix "
+                "(DESIGN.md §18.2), which the §13 topk path never builds")
+        if (self.clean == "rmt" and self.filter == "tmfg"
+                and self.apsp_method == "sparse"):
+            raise ValueError(
+                "clean='rmt' with apsp_method='sparse' is unsupported on "
+                "the TMFG path: the §17 sparse program never materializes "
+                "the similarity it would clean — use apsp_method='hub' "
+                "or 'exact'")
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -153,6 +205,18 @@ class PipelineConfig:
         """PAR-TDBHT-P (Yu & Shun baseline with prefix P)."""
         return cls(method="orig", prefix=prefix, topk=0,
                    apsp_method="exact", **overrides)
+
+    @classmethod
+    def mst(cls, **overrides) -> "PipelineConfig":
+        """Borůvka MST front-end (DESIGN.md §18.1): the OPT stage
+        defaults with ``filter="mst"`` — n-1 edges built in ⌈log₂ n⌉
+        device rounds, clustered through the §18.4 edge-list tail.
+        Runs fused and batch-parallel like OPT; ``overrides`` may
+        replace any other knob (``clean="rmt"``, APSP knobs, ...)."""
+        if "filter" in overrides:
+            raise ValueError("mst() defines ['filter']; drop the override "
+                             "or build PipelineConfig(filter=...) directly")
+        return cls(filter="mst", **overrides)
 
     @classmethod
     def approx(cls, sim_k: int = 64, **overrides) -> "PipelineConfig":
@@ -216,11 +280,18 @@ class PipelineConfig:
         backend, may change float rounding) and must split the cache —
         including the similarity representation (``similarity``/
         ``sim_k``, DESIGN.md §13): a topk result is a different answer
-        than a dense one at the same window.
+        than a dense one at the same window — and the filter matrix
+        (``filter``/``clean``/``ag_m``, DESIGN.md §18): an MST or an
+        RMT-cleaned run answers a different question than a TMFG on
+        the same window, so the stream result cache, the scheduler's
+        micro-batch buckets and the admission idempotency keys (all
+        keyed on this tuple or on the config itself) must never alias
+        them.
         """
         return (self.method, self.prefix, self.topk, self.apsp_method,
                 self.apsp_hubs, self.apsp_rounds, self.backend,
-                self.similarity, self.sim_k)
+                self.similarity, self.sim_k, self.filter, self.clean,
+                self.ag_m)
 
     def replace(self, **changes) -> "PipelineConfig":
         """A copy with ``changes`` applied (frozen-dataclass update)."""

@@ -144,6 +144,11 @@ def _fused_one(cfg: PipelineConfig, have_S: bool):
 
     def one(arr):
         S = arr if have_S else ops.pearson(arr, backend=cfg.backend)
+        if cfg.clean == "rmt":
+            # §18.2: eigenvalue clipping changes ONLY the similarity
+            # input; T is the (static) window length of the series
+            from repro.filters import rmt as rmt_mod  # lazy: no cycle
+            S = rmt_mod.clean(S, arr.shape[-1])
         tm = build_tmfg(S, method=cfg.method, prefix=cfg.prefix,
                         topk=cfg.topk)
         W = apsp_mod.edge_lengths(S.shape[0], tm.edges, S)
@@ -162,8 +167,36 @@ def _fused_one(cfg: PipelineConfig, have_S: bool):
 
 def _needs_approx_body(cfg: PipelineConfig) -> bool:
     """Configs whose fused form is the sparse/approx program
-    (core/fused_approx.py, DESIGN.md §17) instead of the dense body."""
-    return cfg.similarity == "topk" or cfg.apsp_method == "sparse"
+    (core/fused_approx.py, DESIGN.md §17) instead of the dense body.
+    Non-TMFG filters never route here: their sparse APSP runs inside
+    the §18.4 generic tail on the filter's own edge list."""
+    return cfg.filter == "tmfg" and (cfg.similarity == "topk"
+                                     or cfg.apsp_method == "sparse")
+
+
+def _fused_filter_one(cfg: PipelineConfig, have_S: bool):
+    """The traceable single-matrix body for a non-TMFG filter
+    (DESIGN.md §18): similarity (+ optional §18.2 RMT cleaning) → the
+    device filter builder → the §18.4 edge-list tail.  The staged path
+    runs the same jitted stage functions, so fused and staged agree
+    bitwise exactly as on the TMFG path (§12.2)."""
+    from repro import filters as filt  # lazy: no import cycle
+
+    def one(arr):
+        S = arr if have_S else ops.pearson(arr, backend=cfg.backend)
+        if cfg.clean == "rmt":
+            S = filt.rmt.clean(S, arr.shape[-1])
+        fg = filt.build_filter(S, cfg)
+        core = filt.filter_tail(S, fg, apsp_method=cfg.apsp_method,
+                                apsp_hubs=cfg.apsp_hubs,
+                                apsp_rounds=cfg.apsp_rounds,
+                                backend=cfg.backend)
+        return DeviceOutputs(
+            tmfg=fg, direction=core["direction"],
+            conv_mask=core["conv_mask"], cluster_of=core["cluster_of"],
+            bubble_of=core["bubble_of"], apsp=core["D"], linkage=core["Z"])
+
+    return one
 
 
 def _fused_approx_one(cfg: PipelineConfig, have_S: bool, n: int, caps):
@@ -215,6 +248,11 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
             "run_pipeline_device IS the device program; "
             "config.dbht_impl='host' has no fused form — use "
             "cluster(..., fused=False) for the numpy oracle")
+    if config.filter == "pmfg":
+        raise ValueError(
+            "filter='pmfg' has no fused form: greedy planarity-checked "
+            "insertion is the host-orchestrated reference (DESIGN.md "
+            "§18.3) — use cluster(..., fused=False)")
     if mesh is not None:
         from repro.core import distributed as dist_mod  # lazy: no cycle
         return dist_mod.run_pipeline_sharded(
@@ -222,6 +260,12 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
     arr = jnp.asarray(X_or_S, jnp.float32)
     if batched is None:
         batched = arr.ndim == 3
+    if config.clean == "rmt" and (is_similarity or (
+            is_similarity is None and arr.shape[-1] == arr.shape[-2])):
+        raise ValueError(
+            "clean='rmt' needs the raw series X: the Marchenko–Pastur "
+            "bulk edge comes from the (n, T) window shape (DESIGN.md "
+            "§18.2) — a precomputed similarity has no T")
     if is_similarity is None:
         is_similarity = arr.shape[-1] == arr.shape[-2]
         if is_similarity and not bool(
@@ -236,6 +280,10 @@ def run_pipeline_device(X_or_S, config: PipelineConfig, *,
                 f"ambiguous: pass is_similarity= explicitly")
 
     def build():
+        if config.filter != "tmfg":
+            return jax.jit(jax.vmap(_fused_filter_one(config, is_similarity))
+                           if batched
+                           else _fused_filter_one(config, is_similarity))
         if _needs_approx_body(config):
             one = _fused_approx_one(config, is_similarity,
                                     int(arr.shape[-2]), caps)
@@ -334,15 +382,27 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = cfg.dbht_impl == "device" and reuse_tmfg is None
+    if cfg.clean == "rmt" and X is None:
+        raise ValueError(
+            "clean='rmt' needs the raw series X: the Marchenko–Pastur "
+            "bulk edge comes from the (n, T) window shape (DESIGN.md "
+            "§18.2) — pass X, not S/moments")
+    if cfg.filter != "tmfg" and reuse_tmfg is not None:
+        raise ValueError(
+            f"reuse_tmfg is the TMFG warm-start splice (DESIGN.md §10); "
+            f"filter={cfg.filter!r} rebuilds its graph per window")
+
+    can_fuse = (cfg.dbht_impl == "device" and reuse_tmfg is None
+                and cfg.filter != "pmfg")
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device' and no reuse_tmfg "
-            "(the staged path is the host-oracle/warm-start mode; "
-            "fused=False also remains the per-stage-timings mode, "
-            "DESIGN.md §12.4)")
+            "fused=True requires dbht_impl='device', no reuse_tmfg and a "
+            "device-buildable filter (the staged path is the host-oracle/"
+            "warm-start mode and the only path for the host-orchestrated "
+            "filter='pmfg', DESIGN.md §18.3; fused=False also remains the "
+            "per-stage-timings mode, DESIGN.md §12.4)")
 
     if fused:
         # fence=False: the fused path's one device_get IS its sync —
@@ -387,6 +447,10 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             host, k=k, timings=timings if collect_timings else None)
 
     # ---- staged path: per-stage jits + syncs (DESIGN.md §12.4) ----------
+    if cfg.filter != "tmfg":
+        return _cluster_filtered_staged(X=X, S=S, moments=moments, k=k,
+                                        cfg=cfg,
+                                        collect_timings=collect_timings)
     approx = cfg.similarity == "topk"
     if approx and reuse_tmfg is not None and S is None and moments is None:
         raise ValueError(
@@ -407,6 +471,11 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
             assert X is not None, "need X, S or moments"
             S = similarity_from_timeseries(np.asarray(X),
                                            backend=cfg.backend)
+            if cfg.clean == "rmt":
+                # same jitted clean the fused body composes (§18.2), so
+                # fused==staged stays bitwise on the TMFG+rmt path
+                from repro.filters import rmt as rmt_mod  # no cycle
+                S = rmt_mod.clean(S, np.asarray(X).shape[-1])
             S = sp_sim.fence(S)
         elif S is not None:
             S = jnp.asarray(S, dtype=jnp.float32)
@@ -492,6 +561,146 @@ def cluster(X=None, *, S=None, moments=None, k: Optional[int] = None,
                         timings=timings if collect_timings else {},
                         reused_tmfg=reuse_tmfg is not None)
     return out
+
+
+# ---------------------------------------------------------------------------
+# non-TMFG filters, staged (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+def _filtered_result(core_host, fg_host, *, b=None, k=None, timings=None,
+                     ) -> ClusterResult:
+    """ClusterResult from host copies of one §18.4 tail output +
+    :class:`repro.filters.FilterGraph` (entry ``b`` of a batch, or the
+    single matrix when ``b`` is None) — the same
+    ``dbht._result_from_device`` unpacking the fused path uses."""
+    pick = (lambda a: a) if b is None else (lambda a, b=b: a[b])
+    res = dbht_mod._result_from_device(core_host, b)
+    fg = jax.tree.map(pick, fg_host)
+    kk = k if k is not None else len(res.converging)
+    return ClusterResult(
+        labels=res.labels(kk), linkage=res.linkage, tmfg=fg, dbht=res,
+        edge_sum=float(fg.edge_sum), timings=timings or {})
+
+
+def _cluster_filtered_staged(*, X, S, moments, k, cfg,
+                             collect_timings) -> ClusterResult:
+    """Staged (per-stage jit + fenced sync) path for a non-TMFG filter:
+    the same ``similarity``/``tmfg``/``dbht+apsp`` span structure as the
+    TMFG path — the "tmfg" span times the filter build — running the
+    SAME jitted stage functions the fused body composes, so fused and
+    staged agree bitwise (§12.2 extended to the §18 filter matrix)."""
+    from repro import filters as filt  # lazy: no import cycle
+
+    timings: Dict[str, float] = {}
+    with obs_trace.span("pipeline.similarity", fence=True) as sp_sim:
+        if S is None and moments is not None:
+            from repro.stream.window import window_similarity  # no cycle
+            S = sp_sim.fence(window_similarity(moments))
+        elif S is None:
+            assert X is not None, "need X, S or moments"
+            Xh = np.asarray(X)
+            S = similarity_from_timeseries(Xh, backend=cfg.backend)
+            if cfg.clean == "rmt":
+                S = filt.rmt.clean(S, Xh.shape[-1])
+            S = sp_sim.fence(S)
+        else:
+            S = jnp.asarray(S, dtype=jnp.float32)
+    timings["similarity"] = sp_sim.duration
+
+    with obs_trace.span("pipeline.tmfg", fence=True) as sp_f:
+        fg = sp_f.fence(filt.build_filter(S, cfg))
+    timings["tmfg"] = sp_f.duration
+
+    with obs_trace.span("pipeline.dbht+apsp", fence=True) as sp_tail:
+        core = filt.filter_tail(S, fg, apsp_method=cfg.apsp_method,
+                                apsp_hubs=cfg.apsp_hubs,
+                                apsp_rounds=cfg.apsp_rounds,
+                                backend=cfg.backend)
+        sp_tail.fence(core["Z"])
+    timings["dbht+apsp"] = sp_tail.duration
+    timings["total"] = sum(timings.values())
+    for stage in ("similarity", "tmfg", "dbht+apsp"):
+        _observe_stage(stage, timings[stage])
+    _observe_total("staged", timings["total"])
+
+    return _filtered_result(jax.device_get(core), jax.device_get(fg), k=k,
+                            timings=timings if collect_timings else None)
+
+
+def _batched_filter_build(cfg: PipelineConfig, S_b):
+    """Vmapped filter build for a staged batch, jitted per (filter
+    knobs, shape) in the shared bounded executable cache — pmfg loops
+    its host builder per entry and stacks the fixed-shape results."""
+    from repro import filters as filt  # lazy: no import cycle
+
+    if cfg.filter == "pmfg":
+        fgs = [filt.build_pmfg(S_b[b]) for b in range(S_b.shape[0])]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *fgs)
+    fn = jitcache.cached(
+        ("filter_build", cfg.filter, cfg.ag_m, cfg.backend, S_b.shape),
+        lambda: jax.jit(jax.vmap(lambda s: filt.build_filter(s, cfg))))
+    return fn(S_b)
+
+
+def _cluster_filtered_batch_staged(arr, have_S: bool, *, k, cfg, B_out,
+                                   collect_timings) -> "BatchClusterResult":
+    """Staged batch path for a non-TMFG filter: vmapped stage programs
+    with the usual fenced spans; entry ``b`` equals ``cluster(X[b])``."""
+    from repro import filters as filt  # lazy: no import cycle
+
+    B = arr.shape[0]
+    timings: Dict[str, float] = {}
+    with obs_trace.span("pipeline.similarity", fence=True,
+                        batch=B) as sp_sim:
+        if have_S:
+            S_b = arr
+        else:
+            S_b = _batched_similarity(arr, cfg.backend)
+            if cfg.clean == "rmt":
+                T = int(arr.shape[-1])
+                rmt_b = jitcache.cached(
+                    ("rmt_clean_b", T, S_b.shape),
+                    lambda: jax.jit(jax.vmap(
+                        lambda s: filt.rmt.clean(s, T))))
+                S_b = rmt_b(S_b)
+            S_b = sp_sim.fence(S_b)
+    timings["similarity"] = sp_sim.duration
+
+    with obs_trace.span("pipeline.tmfg", fence=True, batch=B) as sp_f:
+        fg_b = sp_f.fence(_batched_filter_build(cfg, S_b))
+    timings["tmfg"] = sp_f.duration
+
+    with obs_trace.span("pipeline.dbht+apsp", fence=True,
+                        batch=B) as sp_tail:
+        tail_b = jitcache.cached(
+            ("filter_tail_b", cfg.apsp_method, cfg.apsp_hubs,
+             cfg.apsp_rounds, cfg.backend, S_b.shape, fg_b.edges.shape),
+            lambda: jax.jit(jax.vmap(
+                lambda s, fg: filt.filter_tail(
+                    s, fg, apsp_method=cfg.apsp_method,
+                    apsp_hubs=cfg.apsp_hubs, apsp_rounds=cfg.apsp_rounds,
+                    backend=cfg.backend))))
+        core_b = tail_b(S_b, fg_b)
+        sp_tail.fence(core_b["Z"])
+        # ONE transfer, sliced to B_out first (pad entries stay on device)
+        core_host = jax.device_get(
+            jax.tree.map(lambda a: a[:B_out], core_b))
+        fg_host = jax.device_get(jax.tree.map(lambda a: a[:B_out], fg_b))
+    timings["dbht+apsp"] = sp_tail.duration
+    timings["total"] = sum(timings.values())
+    for stage in ("similarity", "tmfg", "dbht+apsp"):
+        _observe_stage(stage, timings[stage])
+    _observe_total("staged", timings["total"])
+
+    per = {s: timings[s] / B
+           for s in ("similarity", "tmfg", "dbht+apsp", "total")}
+    results = [
+        _filtered_result(core_host, fg_host, b=b, k=k,
+                         timings=dict(per) if collect_timings else None)
+        for b in range(B_out)]
+    return BatchClusterResult(
+        labels=np.stack([r.labels for r in results]), results=results,
+        timings=timings if collect_timings else {})
 
 
 # ---------------------------------------------------------------------------
@@ -623,14 +832,22 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         variant, config, method=method, prefix=prefix, topk=topk,
         apsp_method=apsp_method, backend=backend, dbht_impl=dbht_impl)
 
-    can_fuse = cfg.dbht_impl == "device"
+    if cfg.clean == "rmt" and X is None:
+        raise ValueError(
+            "clean='rmt' needs the raw series X: the Marchenko–Pastur "
+            "bulk edge comes from the (n, T) window shape (DESIGN.md "
+            "§18.2) — pass X, not S")
+
+    can_fuse = cfg.dbht_impl == "device" and cfg.filter != "pmfg"
     if fused is None:
         fused = can_fuse
     elif fused and not can_fuse:
         raise ValueError(
-            "fused=True requires dbht_impl='device' (the staged path is "
-            "the host-oracle mode; fused=False also remains the "
-            "per-stage-timings mode, DESIGN.md §12.4)")
+            "fused=True requires dbht_impl='device' and a device-buildable "
+            "filter (the staged path is the host-oracle mode and the only "
+            "path for the host-orchestrated filter='pmfg', DESIGN.md "
+            "§18.3; fused=False also remains the per-stage-timings mode, "
+            "DESIGN.md §12.4)")
 
     timings: Dict[str, float] = {}
     if S is None:
@@ -694,6 +911,10 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
     # ---- staged path (DESIGN.md §12.4) ----------------------------------
     # same fenced-span structure as single-matrix cluster() (§15.1):
     # stage splits are device-true and sum to "total"
+    if cfg.filter != "tmfg":
+        return _cluster_filtered_batch_staged(
+            arr, have_S, k=k, cfg=cfg, B_out=B_out,
+            collect_timings=collect_timings)
     approx = cfg.similarity == "topk"
     with obs_trace.span("pipeline.similarity", fence=True,
                         batch=B) as sp_sim:
@@ -707,7 +928,18 @@ def cluster_batch(X=None, *, S=None, k: Optional[int] = None,
         elif have_S:
             S_b = arr
         else:
-            S_b = sp_sim.fence(_batched_similarity(arr, cfg.backend))
+            S_b = _batched_similarity(arr, cfg.backend)
+            if cfg.clean == "rmt":
+                # same vmapped jitted clean as the filter batch path
+                # (§18.2): fused==staged stays bitwise on TMFG+rmt
+                from repro.filters import rmt as rmt_mod  # no cycle
+                T = int(arr.shape[-1])
+                rmt_b = jitcache.cached(
+                    ("rmt_clean_b", T, S_b.shape),
+                    lambda: jax.jit(jax.vmap(
+                        lambda s: rmt_mod.clean(s, T))))
+                S_b = rmt_b(S_b)
+            S_b = sp_sim.fence(S_b)
     timings["similarity"] = sp_sim.duration
 
     with obs_trace.span("pipeline.tmfg", fence=True, batch=B) as sp_tmfg:

@@ -1,0 +1,53 @@
+"""repro.filters — pluggable filter-graph front-ends (DESIGN.md §18).
+
+The filter matrix: interchangeable reductions of one (n, n) similarity
+matrix to a sparse graph feeding one shared hierarchy tail —
+
+  ``tmfg``   3n-6 edges, device insertion loop (core/tmfg.py; the
+             paper's object, and the only filter carrying the bubble
+             tree DBHT proper needs)
+  ``mst``    n-1 edges, device Borůvka rounds (filters/mst.py)
+  ``pmfg``   3n-6 edges, host-orchestrated planarity-checked greedy
+             insertion (filters/pmfg.py; the small-n reference)
+  ``ag``     top-m global threshold (filters/ag.py)
+
+plus ``filters/rmt.py`` Marchenko–Pastur eigenvalue clipping ahead of
+the similarity stage.  Selected via ``PipelineConfig(filter=...,
+clean=...)``; MST and AG run under the fused one-jit pipeline and
+``cluster_batch``, with the non-TMFG hierarchy routed through the
+§18.4 edge-list tail.
+"""
+
+from __future__ import annotations
+
+from . import rmt  # noqa: F401
+from .ag import ag_edge_count, build_ag
+from .graph import FilterGraph, from_edges
+from .mst import build_mst
+from .pmfg import build_pmfg
+from .quality import (FILTERS, compare_filters, edge_recall, edge_set,
+                      edge_sum_ratio)
+from .tail import filter_tail
+
+__all__ = [
+    "FilterGraph", "FILTERS", "ag_edge_count", "build_ag", "build_filter",
+    "build_mst", "build_pmfg", "compare_filters", "edge_recall", "edge_set",
+    "edge_sum_ratio", "filter_tail", "from_edges", "rmt",
+]
+
+
+def build_filter(S, config) -> FilterGraph:
+    """Build ``config.filter``'s graph over a similarity matrix — the
+    dispatch the pipeline's filter branches (fused and staged) share.
+    ``filter="tmfg"`` is not served here: the TMFG keeps its richer
+    ``TMFGResult`` (bubble tree included) via ``tmfg.build_tmfg``."""
+    name = config.filter
+    if name == "mst":
+        return build_mst(S, backend=config.backend)
+    if name == "ag":
+        return build_ag(S, m=ag_edge_count(int(S.shape[-1]), config.ag_m))
+    if name == "pmfg":
+        return build_pmfg(S, backend=config.backend)
+    raise ValueError(
+        f"build_filter serves the non-TMFG filters {('mst', 'pmfg', 'ag')}; "
+        f"got filter={name!r} (use tmfg.build_tmfg for the TMFG)")

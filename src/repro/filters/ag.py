@@ -1,0 +1,44 @@
+"""Asset Graph — global top-m edge threshold (DESIGN.md §18.1).
+
+The simplest filter in the matrix (Onnela et al. 2003 / Song et al.
+2011's "asset graph"): keep the m globally strongest pairs, no
+topological constraint at all.  Unlike the MST/PMFG/TMFG it may be
+DISCONNECTED — which is exactly why the §18.4 generic tail carries a
+connected-components stage.  One ``lax.top_k`` over the flattened
+upper triangle; fixed shapes throughout, so it jits, vmaps, and runs
+under the fused one-jit pipeline like every other builder.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .graph import FilterGraph
+
+
+def ag_edge_count(n: int, ag_m: int = 0) -> int:
+    """Resolve the AG edge budget: ``ag_m`` when positive, else the
+    TMFG's 3n-6 (so the default AG and TMFG capture comparably many
+    edges) — clamped to the n(n-1)/2 pairs that exist."""
+    m = ag_m if ag_m > 0 else max(3 * n - 6, 1)
+    return max(1, min(m, n * (n - 1) // 2))
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def build_ag(S: jax.Array, *, m: int) -> FilterGraph:
+    """Top-m asset graph of a symmetric similarity matrix.
+
+    Returns a :class:`FilterGraph` with exactly m canonical edges, in
+    descending-similarity order (``lax.top_k`` breaks value ties by
+    ascending flat position, so the pick is deterministic).
+    """
+    n = S.shape[0]
+    iu, ju = jnp.triu_indices(n, 1)
+    vals = S[iu, ju]
+    v, pos = jax.lax.top_k(vals, m)
+    edges = jnp.stack([iu[pos], ju[pos]], axis=1).astype(jnp.int32)
+    return FilterGraph(edges=edges, weights=v.astype(jnp.float32),
+                       edge_sum=jnp.sum(v))

@@ -1,0 +1,51 @@
+"""FilterGraph — the one result contract of `repro.filters` (DESIGN.md §18.1).
+
+Every filter front-end (MST, PMFG, Asset Graph — and the TMFG itself,
+through ``TMFGResult``) reduces the same (n, n) similarity matrix to a
+sparse weighted graph.  What the downstream hierarchy actually consumes
+is only the edge list + per-edge similarity — the surface
+``tmfg.adjacency_from_weights`` already feeds into DBHT/HAC — so that
+is all a :class:`FilterGraph` carries.  It is a NamedTuple pytree:
+fixed-shape arrays only, so it jits, vmaps over a batch axis, and rides
+the fused pipeline's one device→host transfer exactly like the TMFG
+arrays do (it occupies the ``tmfg`` slot of
+``pipeline.DeviceOutputs``/``ClusterResult``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FilterGraph(NamedTuple):
+    """Edge-list form of a filtered graph (DESIGN.md §18.1).
+
+    ``edges`` rows are canonical (i < j); every row is a real edge —
+    the builders produce exact fixed edge counts (MST: n-1, PMFG:
+    3n-6, AG: m), so no validity mask is needed.
+    """
+
+    edges: jax.Array     # (E, 2) i32, canonical i < j rows
+    weights: jax.Array   # (E,) f32 — similarity S[i, j] per edge
+    edge_sum: jax.Array  # () f32 — total similarity captured
+
+    def adjacency(self, n: int) -> jax.Array:
+        """Dense (n, n) weighted adjacency (0 off-graph) — the same
+        surface ``tmfg.adjacency_from_weights`` builds for the TMFG."""
+        from repro.core.tmfg import adjacency_from_weights
+        return adjacency_from_weights(n, self.edges, self.weights)
+
+
+def edge_similarities(S: jax.Array, edges: jax.Array) -> jax.Array:
+    """Per-edge similarity gather shared by the builders."""
+    return S[edges[:, 0], edges[:, 1]].astype(jnp.float32)
+
+
+def from_edges(S: jax.Array, edges: jax.Array) -> FilterGraph:
+    """FilterGraph from canonical edges + the similarity they filter."""
+    w = edge_similarities(S, edges)
+    return FilterGraph(edges=edges.astype(jnp.int32), weights=w,
+                       edge_sum=jnp.sum(w))

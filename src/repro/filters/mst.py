@@ -1,0 +1,115 @@
+"""Maximum spanning tree by Borůvka rounds on device (DESIGN.md §18.1).
+
+The MST is the sparsest member of the filter matrix (n-1 edges; the
+degenerate case of the §18.4 edge-list tail) and the classic
+dynamic-industry-classification front-end (Mantegna 1999).  It is built
+as a fixed-shape jitted program — ⌈log₂ n⌉ Borůvka rounds, each one:
+
+  1. per-row maxima of the component-masked similarity (the (n, n)
+     sweep is the round's whole cost — a plain max reduce, NOT the
+     gain-scan argmax kernel: XLA's variadic (value, index) reduce is
+     ~4x a plain max on CPU, and the canonical-id pass below recovers
+     the winning index without it);
+  2. per-component best outgoing edge by (max weight, then lowest
+     canonical edge id) — the tie order is a GLOBAL total order on
+     edges, which is what guarantees the component pick graph has only
+     mutual 2-cycles (both ends pick the same edge), never longer
+     equal-weight cycles, so the union of picks is acyclic;
+  3. hook-and-compress component merging (scatter-min of the lower
+     root into the higher, then pointer-jumping to the fixed point).
+
+Everything is ``lax`` control flow over fixed shapes, so ``build_mst``
+jits once per (n, backend), vmaps over a batch axis, and composes into
+the fused one-jit pipeline unchanged — fused and staged runs execute
+the identical traced function (the §12.2 parity contract extended to
+filters).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .graph import FilterGraph
+
+NEG = -jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def build_mst(S: jax.Array, *, backend: str = "auto") -> FilterGraph:
+    """Maximum spanning tree of a finite symmetric similarity matrix.
+
+    Returns a :class:`FilterGraph` with exactly n-1 canonical edges.
+    Deterministic under weight ties (global (weight, canonical-id)
+    order), so every backend and batch entry builds the same tree.
+    """
+    n = S.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    # canonical edge id: min(u,v) * n + max(u,v) — the global tie order
+    canon = (jnp.minimum(rows[:, None], rows[None, :]) * n
+             + jnp.maximum(rows[:, None], rows[None, :])).astype(jnp.int32)
+    sent = jnp.int32(n * n)
+
+    def n_components(comp):
+        return jnp.sum((comp == rows).astype(jnp.int32))
+
+    def cond(state):
+        comp, _, _, i = state
+        return (n_components(comp) > 1) & (i < n)
+
+    def body(state):
+        comp, edges, offset, i = state
+        # outgoing edges only: intra-component entries are -inf
+        M = jnp.where(comp[:, None] == comp[None, :], NEG, S)
+        # 1. per-row maxima as a PLAIN max reduce — deliberately not the
+        #    masked_argmax kernel here: XLA lowers argmax as a variadic
+        #    (value, index) reduce that costs ~4x a plain max on CPU,
+        #    and the index it would return is recovered for free by the
+        #    canonical-id min in step 2
+        vals = jnp.max(M, axis=1)
+        # 2. per-component max weight, then lowest canonical id among
+        #    the entries achieving it: one fused (n, n) compare+min
+        #    pass, then O(n) segment ops over root labels
+        best = jax.ops.segment_max(vals, comp, num_segments=n)
+        row_min = jnp.min(
+            jnp.where(M == best[comp][:, None], canon, sent), axis=1)
+        emin = jax.ops.segment_min(row_min, comp, num_segments=n)
+        ok = emin < sent
+        a = jnp.clip(emin // n, 0, n - 1).astype(jnp.int32)
+        b = jnp.clip(emin % n, 0, n - 1).astype(jnp.int32)
+        # 3. hook the higher root under the lower (scatter-min), then
+        #    emit this round's APPLIED picks straight into the (n-1, 2)
+        #    output — an O(n) cumsum+scatter per round, never an (n, n)
+        #    pick matrix (whose end-of-loop compaction costs more than
+        #    every Borůvka sweep combined).  Emission must mirror the
+        #    union-find exactly: several picks can hook the same ``hi``
+        #    root and the scatter-min applies only one of them, so an
+        #    edge is emitted iff ITS hook won (``ptr[hi] == lo`` — the
+        #    (lo, hi) pair identifies the edge uniquely: two distinct
+        #    picked edges between the same component pair would each be
+        #    their picker's global (weight, canon) best and hence the
+        #    same edge).  Lost hooks leave their components unmerged and
+        #    their edges re-picked in a later round; the mutual 2-cycle
+        #    duplicate is dropped at the higher root's slot
+        lo = jnp.minimum(comp[a], comp[b])
+        hi = jnp.where(ok, jnp.maximum(comp[a], comp[b]), n)
+        ptr = rows.at[hi].min(lo, mode="drop")
+        keep = ok & (ptr[jnp.minimum(hi, n - 1)] == lo) \
+            & ((rows == lo) | (emin[lo] != emin))
+        pos = jnp.where(keep, offset + jnp.cumsum(keep) - 1, n)
+        pairs = jnp.stack([a, b], axis=1)
+        edges = edges.at[pos].set(pairs, mode="drop")
+        ptr = lax.while_loop(lambda p: jnp.any(p != p[p]),
+                             lambda p: p[p], ptr)
+        return ptr[comp], edges, offset + jnp.sum(keep), i + 1
+
+    edges0 = jnp.zeros((max(n - 1, 0), 2), jnp.int32)
+    _, edges, _, _ = lax.while_loop(
+        cond, body, (rows, edges0, jnp.int32(0), 0))
+
+    # a complete finite S is connected, so exactly n-1 slots were filled
+    w = S[edges[:, 0], edges[:, 1]].astype(jnp.float32)
+    return FilterGraph(edges=edges, weights=w, edge_sum=jnp.sum(w))

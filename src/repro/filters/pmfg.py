@@ -1,0 +1,62 @@
+"""PMFG — greedy planarity-checked edge insertion (DESIGN.md §18.3).
+
+The Planar Maximally Filtered Graph (Tumminello et al. 2005; the
+DBHT reference topology of Song et al. 2011) inserts edges in
+descending similarity order, keeping each one only if the graph stays
+planar, until it holds the planar maximum of 3n-6 edges.  Incremental
+planarity testing is irreducibly sequential and pointer-heavy, so this
+builder is the HOST-ORCHESTRATED reference of the filter matrix, kept
+small-n honest: the scoring stage (gather the n(n-1)/2 pair
+similarities and argsort them) runs on device, and the insertion loop
+runs on host against ``networkx.check_planarity`` (Boyer–Myrvold
+style, linear per test).  It has no fused form —
+``run_pipeline_device`` rejects ``filter="pmfg"`` with a pointed
+error, and ``cluster()`` routes it through the staged path (TMFG is
+the device-shaped approximation of exactly this object; that is the
+paper's whole point).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .graph import FilterGraph, from_edges
+
+
+def build_pmfg(S, *, backend: str = "auto") -> FilterGraph:
+    """PMFG of a symmetric similarity matrix (host loop, device scoring).
+
+    Returns a :class:`FilterGraph` with exactly 3n-6 canonical edges
+    (n >= 3).  Deterministic: the device argsort is stable, so weight
+    ties resolve by ascending flat pair index.
+    """
+    import networkx as nx
+
+    S = jnp.asarray(S, jnp.float32)
+    n = int(S.shape[0])
+    if n < 3:
+        raise ValueError(f"PMFG needs n >= 3 vertices, got n={n}")
+    # device scoring stage: pair similarities + stable descending order
+    iu, ju = jnp.triu_indices(n, 1)
+    order = np.asarray(jnp.argsort(-S[iu, ju], stable=True))
+    iu_h, ju_h = np.asarray(iu), np.asarray(ju)
+
+    target = 3 * n - 6
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    picked = []
+    for idx in order:
+        u, v = int(iu_h[idx]), int(ju_h[idx])
+        G.add_edge(u, v)
+        planar, _ = nx.check_planarity(G)
+        if planar:
+            picked.append((u, v))
+            if len(picked) == target:
+                break
+        else:
+            G.remove_edge(u, v)
+    picked.sort()
+    edges = jnp.asarray(np.asarray(picked, np.int32).reshape(-1, 2))
+    return from_edges(S, edges)

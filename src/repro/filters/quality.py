@@ -1,0 +1,75 @@
+"""Cross-filter quality harness (DESIGN.md §18.5).
+
+Generalizes the PR 5 approx-vs-dense harness (``approx/quality.py``,
+which now re-exports the metric helpers from here) from one comparison
+axis (candidate-table width) to the whole filter matrix: the same
+scale-free metrics — ARI agreement, edge recall, edge-sum ratio —
+scored for every filter on one dataset, against ground-truth labels
+when the data has them (the regime generator does) and against the
+TMFG run as the common reference topology.  This is the table
+``benchmarks/bench_filters.py`` emits rows from and the rolling
+backtest example (examples/backtest_filters.py) scores stability with.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ari import ari
+from repro.core.config import PipelineConfig
+
+FILTERS = ("tmfg", "mst", "pmfg", "ag")
+
+
+def edge_set(edges) -> set:
+    """Undirected edge set as frozen (min, max) pairs."""
+    e = np.asarray(edges)
+    return {(int(min(a, b)), int(max(a, b))) for a, b in e}
+
+
+def edge_recall(edges_a, edges_ref) -> float:
+    """|E_a ∩ E_ref| / |E_ref| — overlap with a reference filter."""
+    ea, er = edge_set(edges_a), edge_set(edges_ref)
+    return len(ea & er) / max(len(er), 1)
+
+
+def edge_sum_ratio(edge_sum_a: float, edge_sum_ref: float) -> float:
+    """Total-similarity-captured ratio vs a reference filter."""
+    return float(edge_sum_a) / float(edge_sum_ref)
+
+
+def compare_filters(X, labels=None, *, k: Optional[int] = None,
+                    config: Optional[PipelineConfig] = None,
+                    filters: Sequence[str] = FILTERS
+                    ) -> Dict[str, Dict[str, float]]:
+    """Cluster ``X`` once per filter and score each run.
+
+    ``config`` supplies the non-filter knobs (default OPT); each run
+    uses ``config.replace(filter=f)``.  Returns ``{filter: row}`` where
+    every row carries ``edge_sum`` and ``n_edges``, plus ``ari`` against
+    ``labels`` when given, and — whenever ``"tmfg"`` is in ``filters`` —
+    ``ari_vs_tmfg``, ``edge_recall_vs_tmfg`` and ``edge_sum_ratio``
+    against the TMFG reference run.
+    """
+    from repro.core.pipeline import cluster  # lazy: no import cycle
+
+    base = config if config is not None else PipelineConfig.opt()
+    runs = {f: cluster(X, k=k, config=base.replace(filter=f))
+            for f in filters}
+    tm = runs.get("tmfg")
+    out: Dict[str, Dict[str, float]] = {}
+    for f, res in runs.items():
+        row = dict(edge_sum=float(res.edge_sum),
+                   n_edges=int(np.asarray(res.tmfg.edges).shape[0]))
+        if labels is not None:
+            row["ari"] = float(ari(np.asarray(labels), res.labels))
+        if tm is not None:
+            row["ari_vs_tmfg"] = float(ari(tm.labels, res.labels))
+            row["edge_recall_vs_tmfg"] = edge_recall(res.tmfg.edges,
+                                                     tm.tmfg.edges)
+            row["edge_sum_ratio"] = edge_sum_ratio(res.edge_sum,
+                                                   tm.edge_sum)
+        out[f] = row
+    return out

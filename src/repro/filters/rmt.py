@@ -1,0 +1,59 @@
+"""RMT correlation cleaning — Marchenko–Pastur eigenvalue clipping
+(DESIGN.md §18.2).
+
+A Pearson matrix estimated from an (n, T) window carries estimation
+noise whose eigenvalue spectrum, for pure noise, fills the
+Marchenko–Pastur bulk [λ₋, λ₊] with λ± = (1 ± √(n/T))² (Laloux et al.
+1999).  Eigenvalues inside the bulk are statistically
+indistinguishable from noise, so the standard cleaning keeps the
+signal eigenpairs (λ ≥ λ₊) and flattens the bulk to its mean:
+
+    C = Σ_bulk λ̄ v vᵀ + Σ_signal λ v vᵀ,   λ̄ = mean of bulk λ
+
+Flattening to the MEAN (rather than zero) preserves the trace, and —
+because the bulk term is λ̄ times a projector, which is basis-invariant
+— makes the map IDEMPOTENT: cleaning a cleaned matrix finds the same
+bulk (all λ̄ < λ₊) with the same mean and reproduces it, so
+``clean(clean(S, T), T) == clean(S, T)`` up to eigensolver roundoff
+(pinned by the tests/test_property.py idempotence sweep).  That is
+also why the diagonal is NOT renormalized to 1 afterwards: the usual
+diag-rescale shifts every eigenvalue and breaks idempotence, and the
+pipeline never reads the diagonal anyway (TMFG scans mask it;
+``apsp.edge_lengths`` zeroes it).
+
+``clean`` is traceable (one ``eigh`` + a reconstruction), so the fused
+pipeline inlines it right after the Pearson stage and the staged path
+runs it as part of the similarity span — only the similarity input
+changes, every downstream stage is untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def bulk_edge(n: int, T) -> float:
+    """The Marchenko–Pastur upper bulk edge λ₊ = (1 + √(n/T))² for an
+    (n, T) observation window (q = n/T)."""
+    q = n / T
+    return (1.0 + q ** 0.5) ** 2
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def clean(S: jax.Array, T: int) -> jax.Array:
+    """Eigenvalue-clipped correlation matrix (trace-preserving,
+    idempotent).  ``T`` is the observation count that set the bulk edge
+    — the window length of the (n, T) series the similarity was
+    estimated from."""
+    n = S.shape[-1]
+    lam_plus = bulk_edge(n, T)
+    w, V = jnp.linalg.eigh(S.astype(jnp.float32))
+    bulk = w < lam_plus
+    nb = jnp.sum(bulk.astype(jnp.int32))
+    lam_avg = jnp.sum(jnp.where(bulk, w, 0.0)) / jnp.maximum(nb, 1)
+    wc = jnp.where(bulk, lam_avg, w)
+    C = (V * wc[None, :]) @ V.T
+    return 0.5 * (C + C.T)

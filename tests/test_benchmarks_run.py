@@ -28,6 +28,27 @@ def test_unknown_section_rejected():
     assert br.main(["--only", "nosuchsection"]) == 2
 
 
+def test_trajectory_gap_tolerant(tmp_path, capsys):
+    """ISSUE 10 satellite: the stamp sequence has holes (BENCH_8 was
+    never committed) — the trajectory loader must glob + numeric-sort,
+    never assume consecutive PR numbers, and skip junk files."""
+    for pr in (5, 7, 10):       # gap at 8/9, and 10 sorts after 5 only
+        (tmp_path / f"BENCH_{pr}.json").write_text(json.dumps(
+            {"scale": 0.05, "sections": {"apsp": []}, "failed": []}))
+    (tmp_path / "BENCH_smoke.json").write_text("{}")     # non-numeric
+    (tmp_path / "BENCH_3.json").write_text("not json")   # unreadable
+    traj = br.load_trajectory(tmp_path)
+    assert [pr for pr, _ in traj] == [5, 7, 10]          # numeric order
+    assert br.print_trajectory(tmp_path) == 0
+    out = capsys.readouterr().out
+    assert "BENCH_5" in out and "BENCH_10" in out
+
+
+def test_trajectory_empty_dir_ok(tmp_path):
+    assert br.load_trajectory(tmp_path) == []
+    assert br.print_trajectory(tmp_path) == 0
+
+
 def test_json_artifact_written(monkeypatch, tmp_path):
     rows = [{"name": "x", "us_per_call": "1"}]
     monkeypatch.setitem(br.SECTIONS, "ok", lambda scale: rows)

@@ -44,6 +44,7 @@ def test_design_md_exists_and_has_sections():
                  "15", "15.1", "15.2", "15.3", "15.4",
                  "16", "16.1", "16.2", "16.3", "16.4",
                  "17", "17.1", "17.2", "17.3", "17.4",
+                 "18", "18.1", "18.2", "18.3", "18.4", "18.5",
                  "Arch-applicability"):
         assert must in sections, f"DESIGN.md lost §{must}"
 
@@ -116,6 +117,17 @@ def test_fused_approx_sections_are_cited_from_code():
     docstring in src/tests/benchmarks."""
     refs = _cited_refs()
     for sub in ("17", "17.1", "17.2", "17.3", "17.4"):
+        assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
+
+
+def test_filter_sections_are_cited_from_code():
+    """§18's spec stays honest the same way (ISSUE 10): the filter
+    matrix, the RMT derivation, the PMFG host boundary, the generic
+    hierarchy tail (the DBHT-on-MST caveat) and the keys/quality/
+    backtest layer must each be cited from at least one docstring in
+    src/tests/benchmarks/examples."""
+    refs = _cited_refs()
+    for sub in ("18", "18.1", "18.2", "18.3", "18.4", "18.5"):
         assert sub in refs, f"DESIGN.md §{sub} is cited from no code"
 
 

@@ -1,0 +1,263 @@
+"""The repro.filters subsystem (DESIGN.md §18).
+
+Pins of ISSUE 10's acceptance criteria:
+  * builder correctness against independent references — MST total
+    weight equals networkx's maximum spanning tree, AG is exactly the
+    global top-m, PMFG is planar with 3n-6 edges and contains the MST;
+  * RMT cleaning — idempotent, trace-preserving, and a no-op on the
+    pipeline when applied to an already-clean input (``clean="rmt"``
+    changes only the similarity input);
+  * pipeline wiring — fused==staged for mst/ag (single and batch),
+    the pmfg fused rejection, the rmt-needs-X rejection, and the
+    ``content_key`` split across filters;
+  * config surface — ``.mst()``, pointed unknown-filter/clean errors,
+    the ag_m / similarity / dbht_impl composition rules.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import clustered_similarity, random_symmetric
+from repro.core.config import PipelineConfig
+from repro.core.pipeline import cluster, cluster_batch
+from repro.data.timeseries import make_dataset
+from repro.filters import (FilterGraph, ag_edge_count, build_ag,
+                           build_filter, build_mst, build_pmfg,
+                           compare_filters, edge_recall, edge_set, rmt)
+from test_fused import _assert_result_equal
+
+
+def _sym(n, seed):
+    S = random_symmetric(n, seed)
+    np.fill_diagonal(S, 1.0)
+    return jnp.asarray(S, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# builders vs independent references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,seed", [(8, 0), (23, 1), (64, 2)])
+def test_mst_matches_networkx(n, seed):
+    nx = pytest.importorskip("networkx")
+    S = _sym(n, seed)
+    fg = build_mst(S)
+    assert isinstance(fg, FilterGraph)
+    assert fg.edges.shape == (n - 1, 2)
+    # canonical i<j ordering
+    e = np.asarray(fg.edges)
+    assert (e[:, 0] < e[:, 1]).all()
+    # a spanning tree: n-1 edges connecting everything
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(map(tuple, e))
+    assert nx.is_tree(G)
+    # same total weight as networkx's maximum spanning tree
+    H = nx.Graph()
+    Sh = np.asarray(S, np.float64)
+    for i in range(n):
+        for j in range(i + 1, n):
+            H.add_edge(i, j, weight=Sh[i, j])
+    ref = nx.maximum_spanning_tree(H)
+    ref_w = sum(d["weight"] for _, _, d in ref.edges(data=True))
+    assert float(fg.edge_sum) == pytest.approx(ref_w, rel=1e-5)
+
+
+def test_mst_ties_still_a_tree():
+    """Equal weights everywhere — the global canonical-edge tie order
+    must still produce a tree (no pick cycles)."""
+    nx = pytest.importorskip("networkx")
+    n = 17
+    S = jnp.ones((n, n), jnp.float32)
+    fg = build_mst(S)
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(map(tuple, np.asarray(fg.edges)))
+    assert nx.is_tree(G)
+
+
+def test_ag_is_exact_top_m():
+    n, m = 32, 40
+    S = _sym(n, 3)
+    fg = build_ag(S, m=m)
+    assert fg.edges.shape == (m, 2)
+    iu, ju = np.triu_indices(n, 1)
+    vals = np.asarray(S)[iu, ju]
+    ref = set(zip(iu[np.argsort(-vals)[:m]], ju[np.argsort(-vals)[:m]]))
+    assert edge_set(fg.edges) == {(int(i), int(j)) for i, j in ref}
+    assert float(fg.edge_sum) == pytest.approx(vals[np.argsort(-vals)[:m]].sum(),
+                                               rel=1e-5)
+
+
+def test_ag_edge_count_default_and_clamp():
+    assert ag_edge_count(50, 0) == 3 * 50 - 6     # TMFG-matched default
+    assert ag_edge_count(50, 17) == 17
+    assert ag_edge_count(4, 100) == 6             # clamped to n(n-1)/2
+    assert ag_edge_count(2, 0) == 1
+
+
+def test_pmfg_planar_and_contains_mst():
+    nx = pytest.importorskip("networkx")
+    n = 24
+    S = _sym(n, 4)
+    fg = build_pmfg(S)
+    assert fg.edges.shape == (3 * n - 6, 2)
+    G = nx.Graph()
+    G.add_edges_from(map(tuple, np.asarray(fg.edges)))
+    ok, _ = nx.check_planarity(G)
+    assert ok
+    # Tumminello 2005: the PMFG contains the MST
+    mst = build_mst(S)
+    assert edge_recall(mst.edges, fg.edges) == pytest.approx(
+        (n - 1) / (3 * n - 6))
+    assert edge_set(mst.edges) <= edge_set(fg.edges)
+
+
+# ---------------------------------------------------------------------------
+# RMT cleaning (§18.2)
+# ---------------------------------------------------------------------------
+
+def test_rmt_idempotent_and_trace_preserving():
+    n, T = 40, 60
+    X, _ = make_dataset(n, T, 3, seed=9)
+    C = jnp.asarray(np.corrcoef(X), jnp.float32)
+    C1 = rmt.clean(C, T)
+    C2 = rmt.clean(C1, T)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2),
+                               atol=2e-5, rtol=0)
+    assert float(jnp.trace(C1)) == pytest.approx(float(jnp.trace(C)),
+                                                 rel=1e-5)
+    # symmetric output
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C1).T, atol=0)
+
+
+def test_rmt_bulk_edge_value():
+    assert rmt.bulk_edge(100, 400) == pytest.approx((1 + 0.5) ** 2)
+
+
+def test_rmt_noop_when_no_bulk():
+    """T >> n with strong structure: eigenvalues above the bulk edge
+    pass through untouched; only bulk modes are averaged."""
+    n, T = 12, 4000
+    X, _ = make_dataset(n, T, 3, noise=0.2, seed=1)
+    C = jnp.asarray(np.corrcoef(X), jnp.float32)
+    w = np.linalg.eigvalsh(np.asarray(C, np.float64))
+    keep = w[w >= rmt.bulk_edge(n, T)]
+    wc = np.linalg.eigvalsh(np.asarray(rmt.clean(C, T), np.float64))
+    np.testing.assert_allclose(np.sort(wc)[-len(keep):], np.sort(keep),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pipeline wiring
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("filt", ["mst", "ag"])
+def test_filter_fused_matches_staged(filt):
+    S, X, _ = clustered_similarity(40, k=3, seed=11)
+    cfg = PipelineConfig(filter=filt)
+    fused = cluster(X, k=3, config=cfg, fused=True)
+    staged = cluster(X, k=3, config=cfg, fused=False)
+    _assert_result_equal(fused, staged, msg=filt)
+    # batch path agrees with the single path entry-wise
+    Xb = np.stack([X, X[::-1]])
+    bat = cluster_batch(Xb, k=3, config=cfg, fused=True)
+    _assert_result_equal(bat[0], fused, msg=f"{filt} batch[0]")
+
+
+def test_filter_rmt_changes_only_similarity_input():
+    """clean="rmt" on the TMFG path == plain TMFG on the pre-cleaned
+    matrix — the ISSUE 10 acceptance criterion."""
+    n, T = 36, 64
+    X, _ = make_dataset(n, T, 3, seed=13)
+    cleaned = cluster(X, k=3, config=PipelineConfig.opt(clean="rmt"))
+    S1 = rmt.clean(jnp.asarray(np.corrcoef(X), jnp.float32), T)
+    plain = cluster(S=np.asarray(S1), k=3, config=PipelineConfig.opt())
+    np.testing.assert_array_equal(cleaned.labels, plain.labels)
+
+
+def test_pmfg_staged_only():
+    S, X, _ = clustered_similarity(18, k=3, seed=2)
+    res = cluster(X, k=3, config=PipelineConfig(filter="pmfg"), fused=False)
+    assert res.labels.shape == (18,)
+    with pytest.raises(ValueError, match="pmfg"):
+        cluster(X, k=3, config=PipelineConfig(filter="pmfg"), fused=True)
+
+
+def test_rmt_requires_series():
+    S, _, _ = clustered_similarity(16, k=2, seed=3)
+    with pytest.raises(ValueError, match="rmt"):
+        cluster(S=S, k=2, config=PipelineConfig.opt(clean="rmt"))
+
+
+def test_content_key_distinguishes_filters():
+    keys = {PipelineConfig(filter=f).content_key() for f in
+            ("tmfg", "mst", "pmfg", "ag")}
+    assert len(keys) == 4
+    assert (PipelineConfig.opt(clean="rmt").content_key()
+            != PipelineConfig.opt().content_key())
+    assert (PipelineConfig(filter="ag", ag_m=10).content_key()
+            != PipelineConfig(filter="ag").content_key())
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_mst_constructor():
+    cfg = PipelineConfig.mst()
+    assert cfg.filter == "mst"
+    key = cfg.content_key()
+    assert key[-3:] == ("mst", "none", 0)
+    with pytest.raises(ValueError, match="filter"):
+        PipelineConfig.mst(filter="ag")
+
+
+def test_unknown_filter_and_clean_rejected():
+    with pytest.raises(ValueError, match=r"tmfg.*mst.*pmfg.*ag"):
+        PipelineConfig(filter="spanner")
+    with pytest.raises(ValueError, match=r"none.*rmt"):
+        PipelineConfig(clean="shrinkage")
+    with pytest.raises(ValueError, match=r"filter"):
+        PipelineConfig.resolve(None, filter="spanner")
+
+
+def test_filter_composition_rules():
+    with pytest.raises(ValueError, match="similarity"):
+        PipelineConfig(filter="mst", similarity="topk", sim_k=8)
+    with pytest.raises(ValueError, match="dbht_impl"):
+        PipelineConfig(filter="mst", dbht_impl="host")
+    with pytest.raises(ValueError, match="ag_m"):
+        PipelineConfig(filter="mst", ag_m=12)
+    with pytest.raises(ValueError, match="ag_m"):
+        PipelineConfig(filter="ag", ag_m=-1)
+    with pytest.raises(ValueError, match="rmt"):
+        PipelineConfig(clean="rmt", similarity="topk", sim_k=8)
+
+
+def test_build_filter_rejects_tmfg():
+    S = _sym(8, 0)
+    with pytest.raises(ValueError, match="build_tmfg"):
+        build_filter(S, PipelineConfig())
+
+
+# ---------------------------------------------------------------------------
+# cross-filter quality harness (§18.5)
+# ---------------------------------------------------------------------------
+
+def test_compare_filters_smoke():
+    X, labels = make_dataset(40, 64, 3, noise=0.6, seed=21)
+    rows = compare_filters(X, labels, k=3)
+    assert set(rows) == {"tmfg", "mst", "pmfg", "ag"}
+    for name, row in rows.items():
+        assert {"ari", "ari_vs_tmfg", "edge_sum", "n_edges",
+                "edge_recall_vs_tmfg", "edge_sum_ratio"} <= set(row)
+    assert rows["tmfg"]["ari_vs_tmfg"] == pytest.approx(1.0)
+    assert rows["tmfg"]["edge_recall_vs_tmfg"] == pytest.approx(1.0)
+    assert rows["mst"]["n_edges"] == 39
+    assert rows["pmfg"]["n_edges"] == rows["tmfg"]["n_edges"] == 114
+    # the MST is (nearly) contained in the TMFG on clustered data;
+    # at minimum its edge sum can't exceed the TMFG's
+    assert rows["mst"]["edge_sum"] <= rows["tmfg"]["edge_sum"] + 1e-4

@@ -3,8 +3,8 @@
 Replaces the hand-enumerated ``sorted(VARIANTS)`` parity grids that
 test_fused.py / test_sparse_apsp.py carried since ISSUEs 4/6 with a
 *seeded random-config sweep*: each pinned seed deterministically draws
-one (n, B, k, variant, sim_k, apsp hubs, dbht_impl) tuple and asserts
-the repo's cross-implementation contracts on it —
+one (n, B, k, variant, sim_k, apsp hubs, dbht_impl, filter, clean)
+tuple and asserts the repo's cross-implementation contracts on it —
 
   * fused == staged (§12.2): labels and linkage of the one-jit device
     program equal the staged per-stage path, batched and unbatched;
@@ -17,7 +17,11 @@ the repo's cross-implementation contracts on it —
     drawn case, the whole fused program's jaxpr holds no (n, n) array,
     and the 4-device sharded funnel equals the single-device program
     (subprocess, like tests/test_distributed.py — conftest pins the
-    main process to one device).
+    main process to one device);
+  * filter-matrix parity (§18, ISSUE 10): the drawn (filter, clean)
+    pair — 6 pinned seeds cover {tmfg, mst, ag} x {none, rmt} —
+    holds fused == staged and batch == single, and RMT cleaning is
+    idempotent on the drawn case.
 
 The draw is a pure function of the seed (``draw_case``), so any
 failure reproduces from its seed alone; ``PINNED_SEEDS`` is the
@@ -69,6 +73,13 @@ def draw_case(seed: int) -> dict:
         hubs=int((4, 8)[rng.integers(2)]),
         dbht_impl=("device", "host")[int(rng.integers(2))],
         data_seed=int(rng.integers(1_000)),
+        # ISSUE 10: the filter matrix rides the same seeds.  Drawn
+        # AFTER (and independently of) the rng stream above, so adding
+        # these keys changed no previously-pinned case; deterministic
+        # like the variant, so 6 pinned seeds cover the full
+        # {tmfg, mst, ag} x {none, rmt} cross product.
+        filter=("tmfg", "mst", "ag")[seed % 3],
+        clean=("none", "rmt")[(seed // 3) % 2],
     )
 
 
@@ -77,6 +88,14 @@ def test_pinned_seeds_cover_every_variant():
     the guarantee the old hand-enumerated grids gave for free."""
     covered = {draw_case(s)["variant"] for s in PINNED_SEEDS}
     assert covered == set(VARIANTS), f"uncovered: {set(VARIANTS) - covered}"
+
+
+def test_pinned_seeds_cover_filter_matrix():
+    """ISSUE 10: the default regression set must keep exercising every
+    fused-capable filter and both clean modes."""
+    cases = [draw_case(s) for s in PINNED_SEEDS]
+    assert {c["filter"] for c in cases} >= {"tmfg", "mst", "ag"}
+    assert {c["clean"] for c in cases} >= {"none", "rmt"}
 
 
 @pytest.mark.parametrize("seed", PINNED_SEEDS)
@@ -135,6 +154,44 @@ def test_full_k_topk_and_impl_agree_with_dense_device(seed):
                                   err_msg=f"case {c} (full-K parity)")
     np.testing.assert_array_equal(base.linkage, approx.linkage,
                                   err_msg=f"case {c} (full-K parity)")
+
+
+@pytest.mark.parametrize("seed", PINNED_SEEDS)
+def test_filter_fused_matches_staged_drawn_config(seed):
+    """§18 parity on the drawn (variant, filter, clean, n, B, k): the
+    fused filter pipeline equals the staged path — labels and linkage —
+    batched and unbatched, with the drawn variant's TMFG/APSP knobs
+    overlaid by the drawn filter/clean pair."""
+    c = draw_case(seed)
+    cfg = PipelineConfig.variant(c["variant"]).replace(
+        filter=c["filter"], clean=c["clean"])
+    Xs = [make_dataset(c["n"], 40, 3, noise=0.7,
+                       seed=c["data_seed"] + b)[0] for b in range(c["B"])]
+    fused = cluster(Xs[0], k=c["k"], config=cfg, fused=True)
+    staged = cluster(Xs[0], k=c["k"], config=cfg, fused=False)
+    _assert_result_equal(fused, staged, msg=f"case {c}")
+    bf = cluster_batch(np.stack(Xs), k=c["k"], config=cfg, fused=True)
+    bs = cluster_batch(np.stack(Xs), k=c["k"], config=cfg, fused=False)
+    for b in range(c["B"]):
+        _assert_result_equal(bf[b], bs[b], msg=f"case {c} entry {b}")
+    np.testing.assert_array_equal(fused.labels, bf.labels[0],
+                                  err_msg=f"case {c} single-vs-batch")
+
+
+@pytest.mark.parametrize("seed", PINNED_SEEDS)
+def test_rmt_clean_idempotent_drawn_config(seed):
+    """§18.2: Marchenko–Pastur clipping is a projection — cleaning an
+    already-cleaned correlation matrix is a no-op (no diagonal
+    renormalization, bulk clipped to its mean)."""
+    from repro.filters import rmt
+    c = draw_case(seed)
+    T = 40
+    X = make_dataset(c["n"], T, 3, noise=0.7, seed=c["data_seed"])[0]
+    C = jnp.asarray(np.corrcoef(X), jnp.float32)
+    C1 = rmt.clean(C, T)
+    C2 = rmt.clean(C1, T)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2),
+                               atol=3e-5, rtol=0, err_msg=f"case {c}")
 
 
 # ---------------------------------------------------------------------------
